@@ -1,0 +1,86 @@
+"""Beyond-paper benchmark: ONLINE adaptive-T vs fixed-T vs hindsight-best.
+
+The paper's §VII names online T selection as future work; this benchmark
+runs the AdaptiveTController (spectral ρ̂ estimator, no oracle access)
+against (a) the naive fixed T=1, (b) the hindsight-best fixed T from the
+fig3 sweep, across communication regimes on MNLI.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import (BATCH, DEFAULT_LOCAL_STEPS, DEFAULT_ROUNDS,
+                               EVAL_N, N_CLIENTS, Setting, _build_fns,
+                               cached_run, mean_over_seeds, sweep)
+from repro.core import make_topology
+from repro.core.adaptive import AdaptiveTController, adaptive_round_masks
+from repro.data import federated_batches, label_skew_partitions
+from repro.data.synthetic import eval_batch
+
+T_GRID = (1, 2, 3, 5, 10, 15)
+
+
+def run_adaptive(task_name: str, p: float, seed: int, *, c: float = 0.35,
+                 rounds: int = DEFAULT_ROUNDS) -> dict:
+    task, cfg, base, lora0, opt, get_round_fn, acc_fn = _build_fns(task_name)
+    parts = label_skew_partitions(task.n_classes, N_CLIENTS)
+    topo = make_topology("complete", N_CLIENTS, p, seed=seed)
+    round_fn = get_round_fn(DEFAULT_LOCAL_STEPS)
+    ctrl = AdaptiveTController(c=c, t_max=15)
+    lora, opt_state = lora0, opt.init(lora0)
+    t_trace = []
+    for batch in federated_batches(task, parts, BATCH, DEFAULT_LOCAL_STEPS,
+                                   rounds, seed=seed + 17):
+        W = np.asarray(topo.sample())
+        ctrl.observe_mixing_matrix(W)
+        masks = adaptive_round_masks(ctrl, "tad").as_array()
+        t_trace.append(ctrl.T)
+        lora, opt_state, _ = round_fn(base, lora, opt_state,
+                                      jax.tree.map(jnp.asarray, batch),
+                                      jnp.asarray(W, jnp.float32), masks)
+    test = eval_batch(task, EVAL_N, seed=9999)
+    toks, labs = jnp.asarray(test["tokens"]), jnp.asarray(test["labels"])
+    accs = [float(acc_fn(base, toks, labs,
+                         jax.tree.map(lambda x: x[..., i, :, :], lora)))
+            for i in range(N_CLIENTS)]
+    return {"acc": float(np.mean(accs)), "T_final": ctrl.T,
+            "T_mean": float(np.mean(t_trace)),
+            "rho_hat": float(np.sqrt(ctrl.rho_sq))}
+
+
+def run(quick: bool = True):
+    seeds = (0,) if quick else (0, 1)
+    p_grid = (0.5, 0.02) if quick else (0.5, 0.1, 0.02)
+    t_grid = (1, 3, 10) if quick else T_GRID
+
+    # fixed-T baselines from the shared cache
+    fixed = sweep([Setting(method="tad", task="mnli", p=p, T=T, seed=s)
+                   for p in p_grid for T in t_grid for s in seeds],
+                  verbose=False)
+
+    print("\n=== adaptive-T (online, no oracle) vs fixed T on MNLI ===")
+    print(f"{'p':>6} {'T=1':>8} {'best-T':>8} {'(T)':>5} {'adaptive':>9} "
+          f"{'T̂ mean':>7} {'ρ̂':>6}")
+    out = {}
+    for p in p_grid:
+        t1 = mean_over_seeds(fixed, seeds=list(seeds), method="tad",
+                             task="mnli", p=p, T=1)[0]
+        best_T, best = max(
+            ((T, mean_over_seeds(fixed, seeds=list(seeds), method="tad",
+                                 task="mnli", p=p, T=T)[0])
+             for T in t_grid), key=lambda kv: kv[1])
+        ad = [run_adaptive("mnli", p, s) for s in seeds]
+        acc_ad = float(np.mean([a["acc"] for a in ad]))
+        print(f"{p:>6} {t1:>8.4f} {best:>8.4f} {best_T:>5} {acc_ad:>9.4f} "
+              f"{ad[0]['T_mean']:>7.1f} {ad[0]['rho_hat']:>6.3f}")
+        out[p] = {"fixed_T1": t1, "hindsight_best": best,
+                  "hindsight_T": best_T, "adaptive": acc_ad,
+                  "adaptive_T_mean": ad[0]["T_mean"],
+                  "rho_hat": ad[0]["rho_hat"]}
+    return out
+
+
+if __name__ == "__main__":
+    run(quick=False)

@@ -1,0 +1,186 @@
+"""Shared DFL experiment harness for the paper-replication benchmarks.
+
+Mirrors the paper's protocol (§VI-A) at CPU scale: m=10 clients, label-skew
+partitions, Erdős–Rényi edge-activation gossip, R rounds × local steps,
+AdamW, LoRA on Q/V with a frozen head; evaluation = mean accuracy across
+all client models, averaged over seeds.
+
+Results are cached in results/experiments.json keyed by the full setting,
+so sweeps are resumable and benchmarks stay cheap on re-run.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import time
+from dataclasses import asdict, dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (build_lora_tree, consensus_stats, make_dfl_round,
+                        make_topology, round_masks)
+from repro.data import federated_batches, label_skew_partitions, make_task
+from repro.data.synthetic import eval_batch
+from repro.models.classifier import (classifier_accuracy, classifier_loss,
+                                     encoder_config, init_classifier)
+from repro.optim import AdamW
+
+RESULTS = os.environ.get("REPRO_RESULTS",
+                         os.path.join(os.path.dirname(__file__), "..",
+                                      "results"))
+CACHE_PATH = os.path.join(RESULTS, "experiments.json")
+
+# CPU-scale stand-in for RoBERTa-large (paper model) — see DESIGN.md §9.
+# The *instability regime* matters: the paper's LoRA-vs-TAD gap only
+# appears when clients' LoRA subspaces genuinely conflict. We operate with
+# per-client feature dialects (feature_shift=2) on top of the paper's label
+# skew, r=8/alpha=16 (paper values), lr=8e-3 (paper searches up to 5e-3 at
+# 20 local steps; we run 10), which reproduces the paper's method ordering
+# at p=0.02 (validated in EXPERIMENTS.md §Paper-validation).
+MODEL_KW = dict(n_layers=2, d_model=64, n_heads=4, d_ff=128, vocab_size=512,
+                lora_rank=8, lora_alpha=16.0)
+N_CLIENTS = 10
+DEFAULT_ROUNDS = 60          # paper: 150 (scaled for CPU budget)
+DEFAULT_LOCAL_STEPS = 10     # paper: 20
+FEATURE_SHIFT = 2
+LR = 8e-3
+BATCH = 16
+EVAL_N = 384
+
+
+@dataclass(frozen=True)
+class Setting:
+    method: str
+    task: str
+    p: float
+    T: int
+    seed: int = 0
+    topology: str = "complete"
+    rounds: int = DEFAULT_ROUNDS
+    local_steps: int = DEFAULT_LOCAL_STEPS
+
+    def key(self) -> str:
+        blob = json.dumps(asdict(self), sort_keys=True)
+        return hashlib.md5(blob.encode()).hexdigest()[:16]
+
+
+_FN_CACHE: dict = {}
+
+
+def _build_fns(task_name: str):
+    if task_name in _FN_CACHE:
+        return _FN_CACHE[task_name]
+    task = make_task(task_name, feature_shift=FEATURE_SHIFT)
+    cfg = encoder_config(**MODEL_KW)
+    n_classes = task.n_classes
+    key = jax.random.key(1234)
+    base = init_classifier(key, cfg, n_classes=n_classes)
+    lora0 = build_lora_tree(jax.random.key(99), base, cfg,
+                            n_clients=N_CLIENTS)
+    opt = AdamW(lr=LR)
+
+    def loss_fn(bp, lo, micro):
+        return classifier_loss(bp, cfg, micro["tokens"], micro["labels"],
+                               lora=lo)
+
+    round_fns = {}
+
+    def get_round_fn(local_steps):
+        if local_steps not in round_fns:
+            round_fns[local_steps] = jax.jit(
+                make_dfl_round(loss_fn, opt, local_steps=local_steps))
+        return round_fns[local_steps]
+
+    acc_fn = jax.jit(lambda bp, toks, labs, lo: classifier_accuracy(
+        bp, cfg, toks, labs, lora=lo))
+    _FN_CACHE[task_name] = (task, cfg, base, lora0, opt, get_round_fn, acc_fn)
+    return _FN_CACHE[task_name]
+
+
+def run_setting(s: Setting, *, collect_diagnostics: bool = False) -> dict:
+    """One DFL run -> {"acc": mean-client accuracy, "loss": final, ...}."""
+    task, cfg, base, lora0, opt, get_round_fn, acc_fn = _build_fns(s.task)
+    parts = label_skew_partitions(task.n_classes, N_CLIENTS)
+    topo = make_topology(s.topology, N_CLIENTS, s.p, seed=s.seed)
+    round_fn = get_round_fn(s.local_steps)
+
+    lora = lora0
+    opt_state = opt.init(lora)
+    diags = []
+    t0 = time.time()
+    for t, batch in enumerate(federated_batches(
+            task, parts, BATCH, s.local_steps, s.rounds, seed=s.seed + 17)):
+        W = jnp.asarray(topo.sample(), jnp.float32)
+        masks = round_masks(s.method, t, s.T).as_array()
+        lora, opt_state, metrics = round_fn(
+            base, lora, opt_state, jax.tree.map(jnp.asarray, batch), W, masks)
+        if collect_diagnostics:
+            st = consensus_stats(lora)
+            diags.append({"round": t,
+                          "cross_norm": float(st["cross_norm"]),
+                          "delta_a_sq": float(st["delta_a_sq"]),
+                          "delta_b_sq": float(st["delta_b_sq"]),
+                          "loss": float(metrics["loss"])})
+    test = eval_batch(task, EVAL_N, seed=9999)
+    toks = jnp.asarray(test["tokens"])
+    labs = jnp.asarray(test["labels"])
+    accs = [float(acc_fn(base, toks, labs,
+                         jax.tree.map(lambda x: x[..., i, :, :], lora)))
+            for i in range(N_CLIENTS)]
+    out = {"acc": float(np.mean(accs)), "acc_std_clients": float(np.std(accs)),
+           "loss": float(metrics["loss"]), "wall_s": round(time.time() - t0, 1),
+           "rho": topo.rho_estimate(60)}
+    if collect_diagnostics:
+        out["diagnostics"] = diags
+    return out
+
+
+def _load_cache() -> dict:
+    if os.path.exists(CACHE_PATH):
+        with open(CACHE_PATH) as f:
+            return json.load(f)
+    return {}
+
+
+def _save_cache(cache: dict) -> None:
+    os.makedirs(RESULTS, exist_ok=True)
+    with open(CACHE_PATH, "w") as f:
+        json.dump(cache, f, indent=1)
+
+
+def cached_run(s: Setting, **kw) -> dict:
+    cache = _load_cache()
+    k = s.key()
+    if k in cache and not kw.get("collect_diagnostics"):
+        return cache[k]["result"]
+    res = run_setting(s, **kw)
+    cache = _load_cache()   # re-read: parallel writers
+    cache[k] = {"setting": asdict(s), "result":
+                {kk: vv for kk, vv in res.items() if kk != "diagnostics"}}
+    _save_cache(cache)
+    return res
+
+
+def sweep(settings: list[Setting], verbose: bool = True) -> dict:
+    out = {}
+    for s in settings:
+        res = cached_run(s)
+        out[s] = res
+        if verbose:
+            print(f"  {s.method:7s} {s.task:5s} p={s.p:<5} T={s.T:<3} "
+                  f"seed={s.seed} -> acc={res['acc']:.4f} "
+                  f"({res.get('wall_s', 0)}s)", flush=True)
+    return out
+
+
+def mean_over_seeds(results: dict, *, seeds: list[int], **fixed) -> tuple:
+    vals = []
+    for s, r in results.items():
+        if all(getattr(s, k) == v for k, v in fixed.items()) \
+                and s.seed in seeds:
+            vals.append(r["acc"])
+    return (float(np.mean(vals)), float(np.std(vals))) if vals else \
+        (float("nan"), float("nan"))

@@ -1,0 +1,60 @@
+"""Paper Fig. 3 + Table IV: empirically-selected optimal switching interval
+T̂*(p) per task, with the median across tasks.
+
+Claim validated: the median T̂*(p) shifts toward larger T as communication
+weakens (Corollary A.11: T* ≍ 1/√(p·λ2)).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Setting, mean_over_seeds, sweep
+from repro.core import (make_topology, optimal_switching_interval,
+                        optimal_switching_interval_edge_activation)
+
+T_GRID = (1, 2, 3, 5, 10, 15)   # divisors of paper's R=150 (§VI-A)
+P_GRID = (0.5, 0.1, 0.02)
+TASKS = ("sst2", "mnli")
+SEEDS = (0, 1)
+
+
+def run(quick: bool = True):
+    # full grid even in quick mode — the sweep cache makes it cheap
+    tasks = TASKS
+    seeds = SEEDS
+    t_grid = T_GRID
+    settings = [Setting(method="tad", task=t, p=p, T=T, seed=s)
+                for p in P_GRID for T in t_grid for t in tasks
+                for s in seeds]
+    results = sweep(settings)
+
+    print("\n=== Fig.3 / Table IV: empirical T̂*(p) ===")
+    print(f"{'p':>6} " + " ".join(f"{t:>8}" for t in tasks) +
+          f" {'median':>8} {'theory T*':>10}")
+    rows = []
+    for p in P_GRID:
+        tstars = []
+        for t in tasks:
+            accs = {T: mean_over_seeds(results, seeds=list(seeds),
+                                       method="tad", task=t, p=p, T=T)[0]
+                    for T in t_grid}
+            tstars.append(max(accs, key=accs.get))
+        med = float(np.median(tstars))
+        rho = make_topology("complete", 10, p, seed=0).rho_estimate(80)
+        # theory anchor: Corollary A.11 (edge-activation form, λ2(K10)=10)
+        theory = optimal_switching_interval_edge_activation(
+            p, 10.0, c=2.0, c_mix=0.5)
+        rows.append({"p": p, "tstar_by_task": dict(zip(tasks, tstars)),
+                     "median": med, "rho": rho, "theory_T": theory})
+        print(f"{p:>6} " + " ".join(f"{ts:>8}" for ts in tstars) +
+              f" {med:>8} {theory:>10}")
+
+    meds = [r["median"] for r in rows]
+    monotone = all(meds[i] <= meds[i + 1] + 1e-9 for i in range(len(meds) - 1))
+    print(f"\nmedian T̂* non-decreasing as p decreases: {monotone} "
+          f"(paper: holds in the reliably convergent regime)")
+    return {"rows": rows, "monotone_trend": monotone}
+
+
+if __name__ == "__main__":
+    run(quick=False)

@@ -1,0 +1,38 @@
+"""Paper Fig. 4/5: accuracy gain of TAD-LoRA over the LoRA baseline on MNLI
+across (p, T) — the non-monotonic (U-shaped-in-T) landscape."""
+from __future__ import annotations
+
+from benchmarks.common import Setting, mean_over_seeds, sweep
+
+T_GRID = (1, 2, 3, 5, 10, 15)
+P_GRID = (0.5, 0.1, 0.02)
+SEEDS = (0, 1)
+
+
+def run(quick: bool = True):
+    seeds = SEEDS[:1] if quick else SEEDS
+    t_grid = (1, 3, 10) if quick else T_GRID
+    settings = [Setting(method="tad", task="mnli", p=p, T=T, seed=s)
+                for p in P_GRID for T in t_grid for s in seeds]
+    settings += [Setting(method="lora", task="mnli", p=p, T=1, seed=s)
+                 for p in P_GRID for s in seeds]
+    results = sweep(settings)
+
+    print("\n=== Fig.4: TAD−LoRA accuracy gain on MNLI over (p, T) ===")
+    print(f"{'p\\T':>6} " + " ".join(f"{T:>8}" for T in t_grid))
+    grid = {}
+    for p in P_GRID:
+        base = mean_over_seeds(results, seeds=list(seeds), method="lora",
+                               task="mnli", p=p)[0]
+        row = []
+        for T in t_grid:
+            acc = mean_over_seeds(results, seeds=list(seeds), method="tad",
+                                  task="mnli", p=p, T=T)[0]
+            row.append(acc - base)
+            grid[(p, T)] = acc - base
+        print(f"{p:>6} " + " ".join(f"{g:+8.4f}" for g in row))
+    return {"grid": {f"{p}|{T}": g for (p, T), g in grid.items()}}
+
+
+if __name__ == "__main__":
+    run(quick=False)

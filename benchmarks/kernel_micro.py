@@ -1,0 +1,73 @@
+"""Kernel microbenchmarks: wall-time of the dispatch path on this backend
+(CPU -> jnp reference; interpret-mode checked for correctness only — Pallas
+timing is meaningless off-TPU) + analytic kernel roofline on v5e."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+from repro.roofline.analysis import HW
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        r = fn(*args)
+    jax.block_until_ready(r)
+    return (time.perf_counter() - t0) / iters * 1e6   # us
+
+
+def run(quick: bool = True):
+    hw = HW()
+    key = jax.random.key(0)
+    rows = []
+
+    # lora_matmul: M=K=N=1024, r=8
+    M = K = N = 512 if quick else 1024
+    x = jax.random.normal(key, (M, K), jnp.float32)
+    w = jax.random.normal(key, (K, N), jnp.float32)
+    a = jax.random.normal(key, (K, 8)) * 0.1
+    b = jax.random.normal(key, (8, N)) * 0.1
+    us = _time(lambda *t: ops.lora_matmul(*t, 2.0), x, w, a, b)
+    flops = 2 * M * K * N + 2 * M * K * 8 + 2 * M * 8 * N
+    rows.append(("lora_matmul", us, f"v5e_roofline_us={flops/hw.peak_flops*1e6:.1f}"))
+
+    # flash_attention
+    S = 512 if quick else 1024
+    q = jax.random.normal(key, (1, 4, S, 64), jnp.float32)
+    us = _time(lambda *t: ops.flash_attention(*t, causal=True), q, q, q)
+    flops = 2 * 2 * 4 * S * S * 64
+    rows.append(("flash_attention", us,
+                 f"v5e_roofline_us={flops/hw.peak_flops*1e6:.1f}"))
+
+    # gossip_mix: m=10 clients, P = 1M params
+    P = 1 << (18 if quick else 20)
+    W = jnp.ones((10, 10)) / 10
+    xs = jax.random.normal(key, (10, P), jnp.float32)
+    us = _time(lambda *t: ops.gossip_mix_flat(*t, 1.0), W, xs)
+    byts = 10 * P * 4 * 2
+    rows.append(("gossip_mix", us,
+                 f"v5e_hbm_us={byts/hw.hbm_bw*1e6:.1f}"))
+
+    # rglru_scan
+    T, Wd = (512, 256) if quick else (2048, 512)
+    aa = jax.nn.sigmoid(jax.random.normal(key, (4, T, Wd)))
+    uu = jax.random.normal(key, (4, T, Wd)) * 0.1
+    us = _time(ops.rglru_scan, aa, uu)
+    byts = 4 * T * Wd * 4 * 3
+    rows.append(("rglru_scan", us, f"v5e_hbm_us={byts/hw.hbm_bw*1e6:.1f}"))
+
+    print("\n=== kernel microbench (CPU dispatch path) ===")
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+    return {n: {"us": u, "derived": d} for n, u, d in rows}
+
+
+if __name__ == "__main__":
+    run(quick=False)

@@ -1,0 +1,51 @@
+"""Pretty-print the dry-run roofline table from results/dryrun.json
+(EXPERIMENTS.md §Roofline source)."""
+from __future__ import annotations
+
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results",
+                       "dryrun.json")
+
+
+def run(quick: bool = True, path: str = RESULTS):
+    if not os.path.exists(path):
+        print(f"(no dry-run results at {path} — run "
+              f"`python -m repro.launch.dryrun --all --mesh both` first)")
+        return {}
+    with open(path) as f:
+        results = json.load(f)
+
+    print("\n=== Roofline (single-pod 16x16, per dry-run combo) ===")
+    hdr = (f"{'arch':<22} {'shape':<12} {'status':<8} {'bottleneck':<11} "
+           f"{'compute_s':>10} {'memory_s':>10} {'coll_s':>10} "
+           f"{'MF/HLO':>7} {'temp_GB':>8}")
+    print(hdr)
+    rows = {}
+    for key, rec in sorted(results.items()):
+        if rec.get("mesh") == "multi":
+            continue
+        arch = rec.get("arch", key.split("|")[0])
+        shape = rec.get("shape", "?")
+        st = rec.get("status", "?")
+        if st == "ok":
+            r = rec["roofline"]
+            tmp = rec.get("memory", {}).get("temp_bytes", 0) / 1e9
+            print(f"{arch:<22} {shape:<12} {st:<8} {r['bottleneck']:<11} "
+                  f"{r['compute_s']:>10.4f} {r['memory_s']:>10.4f} "
+                  f"{r['collective_s']:>10.4f} "
+                  f"{r['useful_compute_ratio']:>7.2f} {tmp:>8.2f}")
+        else:
+            reason = rec.get("reason", rec.get("error", ""))[:40]
+            print(f"{arch:<22} {shape:<12} {st:<8} {reason}")
+        rows[key] = st
+    n_ok = sum(1 for v in rows.values() if v == "ok")
+    n_skip = sum(1 for v in rows.values() if v == "skipped")
+    print(f"\n{n_ok} ok / {n_skip} skipped / "
+          f"{len(rows) - n_ok - n_skip} other")
+    return rows
+
+
+if __name__ == "__main__":
+    run(quick=False)

@@ -1,0 +1,101 @@
+"""Benchmark harness entry point — one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run            # quick mode
+  PYTHONPATH=src python -m benchmarks.run --paper    # full sweeps
+  PYTHONPATH=src python -m benchmarks.run --only fig2,theory
+
+Each module prints its own table and returns a result dict; a final
+``name,us_per_call,derived`` CSV line per benchmark summarizes wall time
+and the headline derived quantity.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+BENCHES = ("fig2", "table1", "fig3", "fig4", "table3", "table5",
+           "theory", "adaptive", "kernels", "roofline")
+
+
+def _headline(name: str, result) -> str:
+    try:
+        if name == "fig2":
+            return f"tad_gain_vs_rolora_weak={result['tad_gain_vs_rolora_weak']:+.4f}"
+        if name == "table1":
+            return f"weak_best={result['weak_best']}"
+        if name == "fig3":
+            return f"tstar_monotone={result['monotone_trend']}"
+        if name == "fig4":
+            vals = list(result["grid"].values())
+            return f"max_gain={max(vals):+.4f}"
+        if name == "table5":
+            return f"tad_ring_avg={result['tad']['avg']:.4f}"
+        if name == "table3":
+            return f"weak_best={result['best']}"
+        if name == "theory":
+            return (f"cross_1/T={result['cross_decreases_with_T']},"
+                    f"cross_vs_p={result['cross_grows_as_p_shrinks']}")
+        if name == "adaptive":
+            worst = min(v["adaptive"] - v["fixed_T1"]
+                        for v in result.values())
+            return f"adaptive_vs_T1_worstcase={worst:+.4f}"
+        if name == "kernels":
+            return f"n_kernels={len(result)}"
+        if name == "roofline":
+            ok = sum(1 for v in result.values() if v == "ok")
+            return f"combos_ok={ok}"
+    except Exception:
+        pass
+    return "done"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--paper", action="store_true",
+                    help="full sweeps (slower; paper-scale grids)")
+    ap.add_argument("--only", default="",
+                    help="comma-separated subset of: " + ",".join(BENCHES))
+    args = ap.parse_args()
+    quick = not args.paper
+    selected = [b.strip() for b in args.only.split(",") if b.strip()] \
+        or list(BENCHES)
+
+    from benchmarks import (adaptive_t, fig2_acc_vs_p, fig3_tstar,
+                            fig4_heatmap, kernel_micro, roofline_report,
+                            table1_regimes, table3_weak_avg, table5_ring,
+                            theory_crossterm)
+    mods = {"fig2": fig2_acc_vs_p, "table1": table1_regimes,
+            "fig3": fig3_tstar, "fig4": fig4_heatmap,
+            "table3": table3_weak_avg, "table5": table5_ring,
+            "theory": theory_crossterm, "adaptive": adaptive_t,
+            "kernels": kernel_micro, "roofline": roofline_report}
+
+    csv_rows = []
+    failed = []
+    for name in selected:
+        if name not in mods:
+            print(f"unknown benchmark {name!r}", file=sys.stderr)
+            continue
+        print(f"\n{'='*70}\n## {name}  ({mods[name].__doc__.splitlines()[0]})"
+              f"\n{'='*70}", flush=True)
+        t0 = time.time()
+        try:
+            result = mods[name].run(quick=quick)
+            us = (time.time() - t0) * 1e6
+            csv_rows.append(f"{name},{us:.0f},{_headline(name, result)}")
+        except Exception as e:  # noqa: BLE001
+            traceback.print_exc()
+            failed.append(name)
+            csv_rows.append(f"{name},0,FAILED:{type(e).__name__}")
+
+    print(f"\n{'='*70}\n## summary (name,us_per_call,derived)\n{'='*70}")
+    for row in csv_rows:
+        print(row)
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""Paper Table V: ring topology stress test (structured, slow-mixing)."""
+from __future__ import annotations
+
+from benchmarks.common import Setting, mean_over_seeds, sweep
+from benchmarks.fig2_acc_vs_p import METHODS
+
+T_BY_METHOD = {"lora": 1, "ffa": 1, "rolora": 1, "tad": 3}
+
+TASKS = ("sst2", "mnli")
+SEEDS = (0, 1)
+
+
+def run(quick: bool = True):
+    seeds = SEEDS[:1] if quick else SEEDS
+    settings = [Setting(method=m, task=t, p=1.0, T=T_BY_METHOD[m], seed=s,
+                        topology="ring")
+                for m in METHODS for t in TASKS for s in seeds]
+    results = sweep(settings)
+
+    print("\n=== Table V: ring topology ===")
+    print(f"{'method':>8} " + " ".join(f"{t:>10}" for t in TASKS) +
+          f" {'avg':>8}")
+    out = {}
+    for m in METHODS:
+        vals = [mean_over_seeds(results, seeds=list(seeds), method=m, task=t,
+                                p=1.0, topology="ring")[0] for t in TASKS]
+        avg = sum(vals) / len(vals)
+        out[m] = {"per_task": dict(zip(TASKS, vals)), "avg": avg}
+        print(f"{m:>8} " + " ".join(f"{v:10.4f}" for v in vals) +
+              f" {avg:8.4f}")
+    return out
+
+
+if __name__ == "__main__":
+    run(quick=False)

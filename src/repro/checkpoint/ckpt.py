@@ -1,0 +1,98 @@
+"""Flat-npz pytree checkpointing, sharding-aware on restore.
+
+Leaves are stored under path-encoded keys ("groups/0/attn/wq"); structure is
+reconstructed from the keys (dicts and lists round-trip; list indices are
+numeric path components). ``restore_sharded`` places leaves with
+jax.device_put against a sharding tree — used by the launcher to restore a
+run directly into the production mesh layout.
+"""
+from __future__ import annotations
+
+import io
+import os
+import re
+from typing import Optional
+
+import jax
+import numpy as np
+
+_SEP = "/"
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}{k}{_SEP}"))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{i}{_SEP}"))
+    elif tree is None:
+        pass
+    else:
+        out[prefix[:-1]] = np.asarray(tree)
+    return out
+
+
+def _unflatten(flat: dict):
+    root: dict = {}
+    for key, val in flat.items():
+        parts = key.split(_SEP)
+        node = root
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = val
+
+    def listify(node):
+        if not isinstance(node, dict):
+            return node
+        keys = list(node.keys())
+        if keys and all(re.fullmatch(r"\d+", k) for k in keys):
+            idx = sorted(int(k) for k in keys)
+            assert idx == list(range(len(idx))), f"sparse list: {keys}"
+            return [listify(node[str(i)]) for i in idx]
+        return {k: listify(v) for k, v in node.items()}
+
+    return listify(root)
+
+
+def save_pytree(path: str, tree) -> None:
+    flat = _flatten(tree)
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    with open(path, "wb") as f:
+        np.savez(f, **flat)
+
+
+def load_pytree(path: str):
+    with np.load(path) as z:
+        flat = {k: z[k] for k in z.files}
+    return _unflatten(flat)
+
+
+def restore_sharded(path: str, shardings=None):
+    """Load and device_put each leaf with its sharding (or default device)."""
+    tree = load_pytree(path)
+    if shardings is None:
+        return jax.tree.map(jax.numpy.asarray, tree)
+    flat_s = _flatten_shardings(shardings)
+    flat_t = _flatten(tree)
+    out = {}
+    for k, v in flat_t.items():
+        s = flat_s.get(k)
+        out[k] = jax.device_put(v, s) if s is not None else jax.numpy.asarray(v)
+    return _unflatten(out)
+
+
+def _flatten_shardings(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten_shardings(v, f"{prefix}{k}{_SEP}"))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten_shardings(v, f"{prefix}{i}{_SEP}"))
+    elif tree is None:
+        pass
+    else:
+        out[prefix[:-1]] = tree
+    return out

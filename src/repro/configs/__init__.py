@@ -1,0 +1,9 @@
+from repro.configs.base import (ARCH_IDS, ModelConfig, LayerSpec, all_configs,
+                                get_config)
+from repro.configs.shapes import (SHAPE_IDS, SHAPES, InputShape,
+                                  shape_applicable)
+
+__all__ = [
+    "ARCH_IDS", "ModelConfig", "LayerSpec", "all_configs", "get_config",
+    "SHAPE_IDS", "SHAPES", "InputShape", "shape_applicable",
+]

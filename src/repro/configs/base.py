@@ -1,0 +1,232 @@
+"""Config schema for assigned architectures.
+
+Every architecture in the public pool is described by a ModelConfig: a
+repeating ``pattern`` of LayerSpec entries (scanned as stacked groups by the
+transformer substrate) plus global dims. ``reduced()`` yields the smoke-test
+variant mandated by the task (<=2 pattern repeats, d_model<=512, <=4 experts).
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from dataclasses import dataclass, field, replace
+from typing import Optional
+
+# ---------------------------------------------------------------------------
+# Layer / model schema
+# ---------------------------------------------------------------------------
+
+# Layer kinds
+ATTN = "attn"          # self-attention (global or sliding-window)
+CROSS = "cross"        # cross-attention (vlm / enc-dec decoder)
+RGLRU = "rglru"        # RG-LRU recurrent block (recurrentgemma)
+MLSTM = "mlstm"        # matrix-LSTM block (xlstm)
+SLSTM = "slstm"        # scalar-LSTM block (xlstm)
+
+# FFN kinds
+DENSE = "dense"
+MOE = "moe"
+NONE = "none"          # block carries its own internal projections (xlstm)
+
+
+@dataclass(frozen=True)
+class LayerSpec:
+    """One layer in the repeating pattern."""
+    kind: str = ATTN
+    window: Optional[int] = None       # sliding-window size; None = global attention
+    ffn: str = DENSE
+
+    def __post_init__(self):
+        assert self.kind in (ATTN, CROSS, RGLRU, MLSTM, SLSTM), self.kind
+        assert self.ffn in (DENSE, MOE, NONE), self.ffn
+
+
+def _round_up(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                        # "decoder" | "encdec" | "vlm"
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int                    # logical vocab (loss is masked to this)
+    pattern: tuple[LayerSpec, ...] = (LayerSpec(),)
+    head_dim: int = 0                  # 0 -> d_model // n_heads
+    # --- MoE ---
+    n_experts: int = 0
+    n_shared_experts: int = 0
+    top_k: int = 0
+    moe_d_ff: int = 0                  # per-expert hidden dim (fine-grained MoE)
+    router_aux_coef: float = 0.01
+    # --- misc ---
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = True
+    act: str = "silu"                  # gate activation for the gated MLP
+    logit_softcap: float = 0.0         # gemma-style final-logit softcap (0 = off)
+    # --- enc-dec / vlm frontends (stubbed modality encoders) ---
+    n_frontend_tokens: int = 0         # audio frames / image patch tokens
+    enc_layers: int = 0                # whisper encoder depth
+    # --- recurrent block dims ---
+    rglru_width: int = 0               # RG-LRU recurrence width (0 -> d_model)
+    conv1d_width: int = 4              # temporal conv inside recurrent block
+    mlstm_proj_factor: float = 2.0
+    slstm_proj_factor: float = 4.0 / 3.0
+    # --- lora (the paper's technique) ---
+    lora_rank: int = 8
+    lora_alpha: float = 16.0
+    lora_targets: tuple[str, ...] = ("wq", "wv")
+    # --- bookkeeping ---
+    citation: str = ""
+    sub_quadratic: bool = False        # eligible for long_500k decode
+    decode_capable: bool = True        # encoder-only archs would be False
+
+    # ------------------------------------------------------------------
+    def __post_init__(self):
+        assert self.family in ("decoder", "encdec", "vlm"), self.family
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // self.n_heads)
+
+    @property
+    def vocab_padded(self) -> int:
+        """Physical vocab, padded for shardability over the model axis."""
+        return _round_up(self.vocab_size, 256)
+
+    @property
+    def n_groups(self) -> int:
+        return self.n_layers // len(self.pattern)
+
+    @property
+    def tail_len(self) -> int:
+        return self.n_layers % len(self.pattern)
+
+    @property
+    def tail_pattern(self) -> tuple[LayerSpec, ...]:
+        return self.pattern[: self.tail_len]
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+    def param_count(self) -> int:
+        """Approximate dense-equivalent parameter count N (for 6ND)."""
+        return _count_params(self, active_only=False)
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: shared + top_k experts only)."""
+        return _count_params(self, active_only=True)
+
+    def reduced(self) -> "ModelConfig":
+        """Smoke-test variant: <=2 pattern repeats, d_model<=512, <=4 experts."""
+        n_heads = min(self.n_heads, 4)
+        hd = min(self.hd, 64)
+        d_model = min(self.d_model, 256)
+        # keep head structure consistent
+        n_kv = min(self.n_kv_heads, n_heads)
+        pat_len = len(self.pattern)
+        n_layers = pat_len if pat_len >= 2 else 2
+        n_layers = min(n_layers, 8)  # recurrentgemma pattern=3 -> 3 layers etc.
+        return replace(
+            self,
+            n_layers=n_layers,
+            d_model=d_model,
+            n_heads=n_heads,
+            n_kv_heads=n_kv,
+            head_dim=hd,
+            d_ff=min(self.d_ff, 512) if self.d_ff else 0,
+            vocab_size=min(self.vocab_size, 512),
+            n_experts=min(self.n_experts, 4),
+            n_shared_experts=min(self.n_shared_experts, 1),
+            top_k=min(self.top_k, 2),
+            moe_d_ff=min(self.moe_d_ff, 128) if self.moe_d_ff else 0,
+            n_frontend_tokens=min(self.n_frontend_tokens, 16),
+            enc_layers=min(self.enc_layers, 2),
+            rglru_width=min(self.rglru_width, d_model) if self.rglru_width else 0,
+            lora_rank=4,
+            # shrink windows so local attention is exercised at tiny seq
+            pattern=tuple(
+                replace(ls, window=min(ls.window, 8) if ls.window else None)
+                for ls in self.pattern
+            ),
+        )
+
+
+def _count_params(cfg: ModelConfig, active_only: bool) -> int:
+    d, hd = cfg.d_model, cfg.hd
+    q_dim = cfg.n_heads * hd
+    kv_dim = cfg.n_kv_heads * hd
+    total = cfg.vocab_padded * d  # embedding
+    if not cfg.tie_embeddings:
+        total += cfg.vocab_padded * d
+
+    def layer_params(spec: LayerSpec) -> int:
+        p = 0
+        if spec.kind in (ATTN, CROSS):
+            p += d * q_dim + 2 * d * kv_dim + q_dim * d  # wq wk wv wo
+        elif spec.kind == RGLRU:
+            w = cfg.rglru_width or d
+            p += 2 * d * w + w * d        # in-proj(x2 branches) + out-proj
+            p += cfg.conv1d_width * w + 2 * w  # conv + gates (diagonal-ish)
+        elif spec.kind == MLSTM:
+            inner = int(d * cfg.mlstm_proj_factor)
+            p += 2 * d * inner + inner * d + 3 * inner * (inner // max(cfg.n_heads, 1))
+        elif spec.kind == SLSTM:
+            p += 4 * d * d + int(d * cfg.slstm_proj_factor) * d * 2
+        if spec.ffn == DENSE:
+            p += 3 * d * cfg.d_ff
+        elif spec.ffn == MOE:
+            e_ff = cfg.moe_d_ff or cfg.d_ff
+            n_e = cfg.top_k + cfg.n_shared_experts if active_only else (
+                cfg.n_experts + cfg.n_shared_experts)
+            p += 3 * d * e_ff * n_e + d * cfg.n_experts  # experts + router
+        p += 2 * d  # norms
+        return p
+
+    groups = cfg.n_groups
+    for spec in cfg.pattern:
+        total += groups * layer_params(spec)
+    for spec in cfg.tail_pattern:
+        total += layer_params(spec)
+    # whisper encoder
+    for _ in range(cfg.enc_layers):
+        total += d * q_dim * 2 + 2 * d * kv_dim + 3 * d * cfg.d_ff + 2 * d
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_ARCH_MODULES = {
+    "whisper-tiny": "whisper_tiny",
+    "granite-34b": "granite_34b",
+    "recurrentgemma-2b": "recurrentgemma_2b",
+    "qwen2-7b": "qwen2_7b",
+    "gemma3-1b": "gemma3_1b",
+    "moonshot-v1-16b-a3b": "moonshot_v1_16b_a3b",
+    "deepseek-moe-16b": "deepseek_moe_16b",
+    "xlstm-1.3b": "xlstm_1_3b",
+    "mixtral-8x22b": "mixtral_8x22b",
+    "llama-3.2-vision-11b": "llama_3_2_vision_11b",
+}
+
+ARCH_IDS = tuple(_ARCH_MODULES)
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    if arch_id not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {list(_ARCH_MODULES)}")
+    mod = importlib.import_module(f"repro.configs.{_ARCH_MODULES[arch_id]}")
+    return mod.CONFIG
+
+
+def all_configs() -> dict[str, ModelConfig]:
+    return {a: get_config(a) for a in ARCH_IDS}

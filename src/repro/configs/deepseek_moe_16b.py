@@ -1,0 +1,28 @@
+"""deepseek-moe-16b [moe]: 28L, d_model=2048, 16H (kv=16), expert d_ff=1408,
+vocab=102400. Fine-grained MoE: 2 shared + 64 routed experts, top-6.
+[arXiv:2401.06066]
+
+Assignment spec lists all layers MoE with d_ff=1408; the real model's dense
+layer-0 FFN is noted in DESIGN.md.
+"""
+from repro.configs.base import ATTN, MOE, LayerSpec, ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-moe-16b",
+    family="decoder",
+    n_layers=28,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=1408,
+    vocab_size=102400,
+    pattern=(LayerSpec(kind=ATTN, window=None, ffn=MOE),),
+    n_experts=64,
+    n_shared_experts=2,
+    top_k=6,
+    moe_d_ff=1408,
+    rope_theta=10000.0,
+    tie_embeddings=False,
+    citation="arXiv:2401.06066 (DeepSeekMoE)",
+    sub_quadratic=False,
+)

@@ -1,0 +1,28 @@
+"""gemma3-1b [dense]: 26L, d_model=1152, 4H (GQA kv=1), d_ff=6912,
+vocab=262144. 5:1 local:global attention, local window 512, 128k-capable via
+sliding windows. 26 = 4x6 + 2 -> 4 scanned (local x5, global) groups +
+(local, local) tail. [hf:google/gemma-3-1b-pt]
+"""
+from repro.configs.base import ATTN, DENSE, LayerSpec, ModelConfig
+
+_LOCAL = LayerSpec(kind=ATTN, window=512, ffn=DENSE)
+_GLOBAL = LayerSpec(kind=ATTN, window=None, ffn=DENSE)
+
+CONFIG = ModelConfig(
+    name="gemma3-1b",
+    family="decoder",
+    n_layers=26,
+    d_model=1152,
+    n_heads=4,
+    n_kv_heads=1,
+    head_dim=256,
+    d_ff=6912,
+    vocab_size=262144,
+    pattern=(_LOCAL, _LOCAL, _LOCAL, _LOCAL, _LOCAL, _GLOBAL),
+    rope_theta=1_000_000.0,
+    tie_embeddings=True,
+    citation="hf:google/gemma-3-1b-pt",
+    # mostly sliding-window; the few global layers keep an MQA cache whose
+    # decode cost is linear in cache length -> long_500k is runnable.
+    sub_quadratic=True,
+)

@@ -1,0 +1,20 @@
+"""granite-34b [dense]: 88L, d_model=6144, 48H (GQA kv=1 / MQA), d_ff=24576,
+vocab=49152. Llama-style code model. [arXiv:2405.04324]
+"""
+from repro.configs.base import ATTN, DENSE, LayerSpec, ModelConfig
+
+CONFIG = ModelConfig(
+    name="granite-34b",
+    family="decoder",
+    n_layers=88,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=1,
+    d_ff=24576,
+    vocab_size=49152,
+    pattern=(LayerSpec(kind=ATTN, window=None, ffn=DENSE),),
+    rope_theta=10000.0,
+    tie_embeddings=False,
+    citation="arXiv:2405.04324 (Granite Code Models)",
+    sub_quadratic=False,
+)

@@ -1,0 +1,26 @@
+"""llama-3.2-vision-11b [vlm]: 40L, d_model=4096, 32H (GQA kv=8), d_ff=14336,
+vocab=128256. Cross-attention image layers every 5th layer: pattern
+(self x4, cross) x8 = 40. Vision encoder/projector is a stub — input_specs()
+supplies 1601 projected patch embeddings. [hf:meta-llama/Llama-3.2-11B-Vision]
+"""
+from repro.configs.base import ATTN, CROSS, DENSE, LayerSpec, ModelConfig
+
+_SELF = LayerSpec(kind=ATTN, window=None, ffn=DENSE)
+_CROSS = LayerSpec(kind=CROSS, ffn=DENSE)
+
+CONFIG = ModelConfig(
+    name="llama-3.2-vision-11b",
+    family="vlm",
+    n_layers=40,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=14336,
+    vocab_size=128256,
+    pattern=(_SELF, _SELF, _SELF, _SELF, _CROSS),
+    n_frontend_tokens=1601,           # 1 tile x (40x40+1) patches
+    rope_theta=500000.0,
+    tie_embeddings=False,
+    citation="hf:meta-llama/Llama-3.2-11B-Vision",
+    sub_quadratic=False,
+)

@@ -1,0 +1,25 @@
+"""mixtral-8x22b [moe]: 56L, d_model=6144, 48H (GQA kv=8), expert d_ff=16384,
+vocab=32768. 8 experts top-2, sliding-window attention (w=4096).
+[arXiv:2401.04088]
+"""
+from repro.configs.base import ATTN, MOE, LayerSpec, ModelConfig
+
+CONFIG = ModelConfig(
+    name="mixtral-8x22b",
+    family="decoder",
+    n_layers=56,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=8,
+    d_ff=16384,
+    vocab_size=32768,
+    pattern=(LayerSpec(kind=ATTN, window=4096, ffn=MOE),),
+    n_experts=8,
+    n_shared_experts=0,
+    top_k=2,
+    moe_d_ff=16384,
+    rope_theta=1_000_000.0,
+    tie_embeddings=False,
+    citation="arXiv:2401.04088 (Mixtral of Experts)",
+    sub_quadratic=True,   # SWA rolling cache on every layer -> long_500k runs
+)

@@ -1,0 +1,28 @@
+"""moonshot-v1-16b-a3b [moe]: 48L, d_model=2048, 16H (GQA kv=16), expert
+d_ff=1408, vocab=163840, MoE 64 experts top-6 (+2 shared, deepseek-v3-style
+fine-grained MoE per the Moonlight card). [hf:moonshotai/Moonlight-16B-A3B]
+
+Assignment spec lists uniform d_ff=1408 (expert width); we follow it for all
+layers (the real model's dense first layer is noted in DESIGN.md).
+"""
+from repro.configs.base import ATTN, MOE, LayerSpec, ModelConfig
+
+CONFIG = ModelConfig(
+    name="moonshot-v1-16b-a3b",
+    family="decoder",
+    n_layers=48,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=1408,
+    vocab_size=163840,
+    pattern=(LayerSpec(kind=ATTN, window=None, ffn=MOE),),
+    n_experts=64,
+    n_shared_experts=2,
+    top_k=6,
+    moe_d_ff=1408,
+    rope_theta=50000.0,
+    tie_embeddings=True,
+    citation="hf:moonshotai/Moonlight-16B-A3B",
+    sub_quadratic=False,
+)

@@ -1,0 +1,21 @@
+"""qwen2-7b [dense]: 28L, d_model=3584, 28H (GQA kv=4), d_ff=18944,
+vocab=152064. QKV bias. [arXiv:2407.10671]
+"""
+from repro.configs.base import ATTN, DENSE, LayerSpec, ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-7b",
+    family="decoder",
+    n_layers=28,
+    d_model=3584,
+    n_heads=28,
+    n_kv_heads=4,
+    d_ff=18944,
+    vocab_size=152064,
+    pattern=(LayerSpec(kind=ATTN, window=None, ffn=DENSE),),
+    qkv_bias=True,
+    rope_theta=1_000_000.0,
+    tie_embeddings=False,
+    citation="arXiv:2407.10671 (Qwen2)",
+    sub_quadratic=False,
+)

@@ -1,0 +1,29 @@
+"""recurrentgemma-2b [hybrid]: 26L, d_model=2560, 10H (GQA kv=1), d_ff=7680,
+vocab=256000. Griffin-style: (RG-LRU, RG-LRU, local-attn) 1:2 ratio,
+window 2048. 26 = 8x3 + 2 -> 8 scanned groups + (RG-LRU, RG-LRU) tail.
+[arXiv:2402.19427]
+"""
+from repro.configs.base import ATTN, DENSE, RGLRU, LayerSpec, ModelConfig
+
+CONFIG = ModelConfig(
+    name="recurrentgemma-2b",
+    family="decoder",
+    n_layers=26,
+    d_model=2560,
+    n_heads=10,
+    n_kv_heads=1,
+    head_dim=256,
+    d_ff=7680,
+    vocab_size=256000,
+    pattern=(
+        LayerSpec(kind=RGLRU, ffn=DENSE),
+        LayerSpec(kind=RGLRU, ffn=DENSE),
+        LayerSpec(kind=ATTN, window=2048, ffn=DENSE),
+    ),
+    rglru_width=2560,
+    conv1d_width=4,
+    tie_embeddings=True,
+    logit_softcap=30.0,
+    citation="arXiv:2402.19427 (Griffin / RecurrentGemma)",
+    sub_quadratic=True,   # recurrence + windowed attention -> long_500k runs
+)

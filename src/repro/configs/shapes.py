@@ -1,0 +1,36 @@
+"""The four assigned input shapes.
+
+train_4k lowers the paper's DFL round (local LoRA steps + joint gossip
+mixing); prefill/decode shapes lower serving steps. ``long_500k`` requires a
+sub-quadratic architecture (cfg.sub_quadratic).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+TRAIN_4K = InputShape("train_4k", 4_096, 256, "train")
+PREFILL_32K = InputShape("prefill_32k", 32_768, 32, "prefill")
+DECODE_32K = InputShape("decode_32k", 32_768, 128, "decode")
+LONG_500K = InputShape("long_500k", 524_288, 1, "decode")
+
+SHAPES = {s.name: s for s in (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)}
+SHAPE_IDS = tuple(SHAPES)
+
+
+def shape_applicable(cfg, shape: InputShape) -> tuple[bool, str]:
+    """Return (applicable, reason-if-not) for an (arch, shape) pair."""
+    if shape.kind == "decode" and not cfg.decode_capable:
+        return False, "encoder-only architecture has no decode step"
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, ("pure full-attention architecture; 500k decode needs a "
+                       "sub-quadratic (sliding-window / recurrent) variant")
+    return True, ""

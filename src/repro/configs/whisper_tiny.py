@@ -1,0 +1,29 @@
+"""whisper-tiny [audio]: 4L enc + 4L dec, d_model=384, 6H (kv=6), d_ff=1536,
+vocab=51865. Encoder-decoder; conv/mel frontend is a stub — input_specs()
+supplies 1500 precomputed frame embeddings. [arXiv:2212.04356]
+
+Whisper uses plain LayerNorm + GELU MLP; the substrate approximates the MLP
+with its gated form (parameter-count-comparable) and keeps LayerNorm
+semantics via RMSNorm — noted in DESIGN.md. Decoder uses learned positions in
+the original; we use RoPE uniformly across the zoo (substrate choice).
+"""
+from repro.configs.base import ATTN, CROSS, DENSE, LayerSpec, ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-tiny",
+    family="encdec",
+    n_layers=4,                       # decoder layers (self + cross each)
+    enc_layers=4,                     # encoder layers (bidirectional)
+    d_model=384,
+    n_heads=6,
+    n_kv_heads=6,
+    d_ff=1536,
+    vocab_size=51865,
+    pattern=(LayerSpec(kind=ATTN, ffn=DENSE),),  # self-attn; cross added by encdec wrapper
+    n_frontend_tokens=1500,           # whisper 30s -> 1500 frames
+    qkv_bias=True,
+    tie_embeddings=True,
+    citation="arXiv:2212.04356 (Radford et al., Whisper)",
+    sub_quadratic=False,              # full-attention decoder
+    decode_capable=True,              # enc-dec: decoder decodes
+)

@@ -1,0 +1,26 @@
+"""xlstm-1.3b [ssm]: 48 blocks, d_model=2048, 4H (kv=4), d_ff=0 (blocks carry
+internal projections), vocab=50304. sLSTM + mLSTM at the paper's 7:1 ratio:
+pattern = 7x mLSTM + 1x sLSTM, x6 groups = 48. [arXiv:2405.04517]
+"""
+from repro.configs.base import MLSTM, NONE, SLSTM, LayerSpec, ModelConfig
+
+_M = LayerSpec(kind=MLSTM, ffn=NONE)
+_S = LayerSpec(kind=SLSTM, ffn=NONE)
+
+CONFIG = ModelConfig(
+    name="xlstm-1.3b",
+    family="decoder",
+    n_layers=48,
+    d_model=2048,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=0,
+    vocab_size=50304,
+    pattern=(_M, _M, _M, _M, _M, _M, _M, _S),
+    mlstm_proj_factor=2.0,
+    slstm_proj_factor=4.0 / 3.0,
+    conv1d_width=4,
+    tie_embeddings=True,
+    citation="arXiv:2405.04517 (xLSTM)",
+    sub_quadratic=True,   # pure recurrence -> O(1) state decode
+)

@@ -1,0 +1,84 @@
+"""Beyond-paper: ONLINE topology-aware switching-interval selection.
+
+The paper selects T in hindsight and names adaptive selection as future
+work (§VII: "adaptive switching policies that adjust T online based on
+communication conditions"). This module closes that gap with two
+estimators that need no oracle access:
+
+1. **Spectral estimator** — each round the realized mixing matrix W_t is
+   known to every client's runtime (it is the communication schedule that
+   actually executed). Maintain an EWMA of ||W_t − J||₂² → ρ̂², and set
+   T ← clip(c/√(1−ρ̂)) at phase boundaries (Theorem V.3).
+
+2. **Consensus-probe estimator** — when W_t itself is not observable
+   (e.g. lossy links), track the contraction of the *frozen block's*
+   disagreement Δ² between consecutive rounds: Lemma A.4 says the frozen
+   block contracts at exactly ρ² per round, so the measured ratio is an
+   unbiased ρ̂² probe that costs one norm per round.
+
+Both update T only at phase boundaries (changing T mid-phase would
+desynchronize clients' phase calendars — the instability the paper's
+Alg. 1 exists to avoid).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+
+@dataclass
+class AdaptiveTController:
+    c: float = 1.0                  # T*(ρ) = c/√(1−ρ)
+    ewma: float = 0.2               # smoothing for ρ̂²
+    t_min: int = 1
+    t_max: int = 32
+    T: int = 1                      # current interval
+    rho_sq: float = 0.5             # running estimate of ρ²
+    _round_in_phase: int = field(default=0, repr=False)
+    _phase_parity: int = field(default=0, repr=False)
+
+    # -- estimators ---------------------------------------------------------
+    def observe_mixing_matrix(self, W: np.ndarray) -> None:
+        """Spectral estimator: ρ̂² ← EWMA of ||W_t − J||₂²."""
+        m = W.shape[0]
+        J = np.ones((m, m)) / m
+        s2 = float(np.linalg.norm(W - J, ord=2) ** 2)
+        self.rho_sq = (1 - self.ewma) * self.rho_sq + self.ewma * s2
+
+    def observe_frozen_contraction(self, delta_sq_prev: float,
+                                   delta_sq_now: float) -> None:
+        """Consensus-probe estimator (Lemma A.4): frozen-block Δ² contracts
+        at ρ² per gossip round."""
+        if delta_sq_prev > 1e-12:
+            ratio = min(max(delta_sq_now / delta_sq_prev, 0.0), 1.0)
+            self.rho_sq = (1 - self.ewma) * self.rho_sq + self.ewma * ratio
+
+    # -- schedule -----------------------------------------------------------
+    def target_T(self) -> int:
+        gap = max(1.0 - np.sqrt(self.rho_sq), 1e-6)
+        return int(np.clip(round(self.c / np.sqrt(gap)),
+                           self.t_min, self.t_max))
+
+    def step(self) -> tuple[bool, int]:
+        """Advance one round. Returns (is_A_phase, current_T). T updates
+        ONLY at phase boundaries (paper Alg. 1: B-phase first)."""
+        if self._round_in_phase >= self.T:
+            self._phase_parity ^= 1
+            self._round_in_phase = 0
+            self.T = self.target_T()
+        self._round_in_phase += 1
+        return bool(self._phase_parity), self.T
+
+
+def adaptive_round_masks(ctrl: AdaptiveTController, method: str = "tad"):
+    """RoundMasks from the controller (drop-in for alternating.round_masks)."""
+    from repro.core.alternating import RoundMasks
+    is_a, _ = ctrl.step()
+    ph = 1.0 if is_a else 0.0
+    if method == "tad":
+        return RoundMasks(ph, 1.0 - ph, 1.0, 1.0)
+    if method == "rolora":
+        return RoundMasks(ph, 1.0 - ph, ph, 1.0 - ph)
+    raise ValueError(f"adaptive schedule only applies to alternating "
+                     f"methods, got {method!r}")

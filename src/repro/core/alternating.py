@@ -1,0 +1,57 @@
+"""Alternating phase schedule + the four methods as (update, mix) masks.
+
+Algorithm 1: round t is a **B-phase** when ⌊t/T⌋ is even (B is updated, A
+frozen), else an **A-phase**. A method is fully described by four 0/1
+scalars per round:
+
+            update_a update_b   mix_a mix_b
+  LORA         1        1         1     1    (joint training, FedAvg gossip)
+  FFA-LORA     0        1         1     1    (A frozen at shared init)
+  ROLORA      ph       1-ph      ph    1-ph  (alternate; mix ACTIVE only)
+  TAD-LORA    ph       1-ph       1     1    (alternate; JOINT mixing) ← ours
+
+with ph = 1 in an A-phase, 0 in a B-phase. Masks are traced scalars — one
+compiled DFL round serves every method, phase, and topology sample.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+import numpy as np
+
+METHODS = ("lora", "ffa", "rolora", "tad")
+
+
+def phase_is_a(t: int | jnp.ndarray, T: int):
+    """True in an A-phase (paper: B-phase when ⌊t/T⌋ even)."""
+    return ((t // T) % 2) == 1
+
+
+@dataclass(frozen=True)
+class RoundMasks:
+    update_a: float
+    update_b: float
+    mix_a: float
+    mix_b: float
+
+    def as_array(self):
+        return jnp.array([self.update_a, self.update_b,
+                          self.mix_a, self.mix_b], jnp.float32)
+
+
+def round_masks(method: str, t: int, T: int) -> RoundMasks:
+    ph = 1.0 if bool(np.asarray(phase_is_a(t, T))) else 0.0
+    if method == "lora":
+        return RoundMasks(1.0, 1.0, 1.0, 1.0)
+    if method == "ffa":
+        return RoundMasks(0.0, 1.0, 1.0, 1.0)
+    if method == "rolora":
+        return RoundMasks(ph, 1.0 - ph, ph, 1.0 - ph)
+    if method == "tad":
+        return RoundMasks(ph, 1.0 - ph, 1.0, 1.0)
+    raise ValueError(f"unknown method {method!r}; known: {METHODS}")
+
+
+def schedule(method: str, rounds: int, T: int) -> list[RoundMasks]:
+    return [round_masks(method, t, T) for t in range(rounds)]

@@ -1,0 +1,78 @@
+"""Theory diagnostics (§V / Appendix A): consensus errors, cross term.
+
+For every adapted module with stacked client factors a_i, b_i:
+  Δ_A² = (1/m) Σ_i ||a_i − ā||_F²        (block disagreement, Appx A-A)
+  Δ_B² = (1/m) Σ_i ||b_i − b̄||_F²
+  C    = (1/m) Σ_i (a_i − ā)(b_i − b̄)    (cross term, Appx A-D; our storage
+                                          order ΔW = a@b)
+  ||C||_F ≤ ||Δ_A||·||Δ_B||              (Cauchy–Schwarz bound — asserted
+                                          in tests as a property)
+
+These power the paper-validation experiments: frozen-block contraction at
+rate ρ² (Lemma A.4), cycle-averaged cross-term ~ η²/(T(1−ρ)) (Prop. A.5).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _iter_ab(lora):
+    """Yield (path, a, b) for each adapted module."""
+    def walk(node, path):
+        if isinstance(node, dict):
+            if "a" in node and "b" in node and hasattr(node["a"], "ndim"):
+                yield path, node["a"], node["b"]
+                return
+            for k, v in node.items():
+                yield from walk(v, path + (k,))
+        elif isinstance(node, (list, tuple)):
+            for i, v in enumerate(node):
+                yield from walk(v, path + (i,))
+    yield from walk(lora, ())
+
+
+def _fro_sq(x, axes):
+    return jnp.sum(jnp.square(x.astype(jnp.float32)), axis=axes)
+
+
+def consensus_stats(lora) -> dict:
+    """Aggregate Δ_A², Δ_B², ||C||_F, and the Cauchy–Schwarz bound over all
+    adapted modules (client axis at -3; possible group axis leads)."""
+    da_sq = 0.0
+    db_sq = 0.0
+    cross = 0.0
+    bound = 0.0
+    for _, a, b in _iter_ab(lora):
+        a32, b32 = a.astype(jnp.float32), b.astype(jnp.float32)
+        abar = jnp.mean(a32, axis=-3, keepdims=True)
+        bbar = jnp.mean(b32, axis=-3, keepdims=True)
+        da = a32 - abar
+        db = b32 - bbar
+        # per-module scalars (mean over clients, summed over group axes)
+        da2 = jnp.sum(jnp.mean(_fro_sq(da, (-2, -1)), axis=-1))
+        db2 = jnp.sum(jnp.mean(_fro_sq(db, (-2, -1)), axis=-1))
+        C = jnp.mean(jnp.einsum("...dr,...rf->...df", da, db), axis=-3)
+        cn = jnp.sum(jnp.sqrt(jnp.sum(jnp.square(C), axis=(-2, -1))))
+        da_sq = da_sq + da2
+        db_sq = db_sq + db2
+        cross = cross + cn
+        bound = bound + jnp.sqrt(
+            jnp.sum(jnp.mean(_fro_sq(da, (-2, -1)), axis=-1)) *
+            jnp.sum(jnp.mean(_fro_sq(db, (-2, -1)), axis=-1)))
+    return {"delta_a_sq": da_sq, "delta_b_sq": db_sq,
+            "cross_norm": cross, "cs_bound": bound}
+
+
+consensus_stats_jit = jax.jit(consensus_stats)
+
+
+def effective_update_norm(lora) -> jax.Array:
+    """||mean_i a_i @ b_i||_F — magnitude of the consensus LoRA update."""
+    total = 0.0
+    for _, a, b in _iter_ab(lora):
+        w = jnp.mean(jnp.einsum("...dr,...rf->...df",
+                                a.astype(jnp.float32),
+                                b.astype(jnp.float32)), axis=-3)
+        total = total + jnp.sqrt(jnp.sum(jnp.square(w)))
+    return total

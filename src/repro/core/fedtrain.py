@@ -1,0 +1,84 @@
+"""The decentralized FL round (Algorithm 1), compiled once for all methods.
+
+One round = ``local_steps`` per-client AdamW updates on the active LoRA
+block + one gossip mixing step. Clients are *stacked* (axis -3 of every LoRA
+leaf) and sharded over the mesh's client axes; local updates are batched
+einsums, mixing is the W_t contraction (core.mixing).
+
+Method/phase enter ONLY through the 4-scalar ``masks`` input
+(core.alternating.RoundMasks), and the topology through the W_t input
+array — so a single jit-compiled round serves every (method, phase, graph
+sample). Per-client AdamW falls out of elementwise moments on the stacked
+tree; the (1/m) loss scaling from averaging over clients cancels inside
+AdamW's mu/sqrt(nu) normalization (scale invariance, eps aside).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import mixing
+from repro.core.lora import shard_lora_tree
+from repro.dist.sharding import logical
+from repro.optim.adamw import AdamW, AdamWState
+
+
+def _ab_mask(masks):
+    """Per-leaf update mask: 'a' leaves -> masks[0], 'b' leaves -> masks[1]."""
+    def fn(path):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        return masks[0] if name == "a" else masks[1]
+    return fn
+
+
+def make_dfl_round(loss_fn: Callable, optimizer: AdamW, *,
+                   local_steps: int = 1,
+                   mix_impl: str = "per_leaf",
+                   donate: bool = True):
+    """Build the jit-able round function.
+
+    loss_fn(base_params, lora, microbatch) -> scalar loss
+      microbatch carries the per-client batch (leading client axis matching
+      the LoRA client axis).
+
+    Returns round_fn(base_params, lora, opt_state, batch, W, masks)
+      -> (lora, opt_state, metrics)
+    ``batch`` leaves have a leading (local_steps, ...) axis.
+    """
+    mix = (mixing.mix_tree if mix_impl == "per_leaf"
+           else mixing.mix_tree_concat)
+
+    def round_fn(base_params, lora, opt_state: AdamWState, batch, W, masks):
+        mask_fn = _ab_mask(masks)
+
+        def local_step(carry, micro):
+            lo, opt = carry
+            loss, grads = jax.value_and_grad(
+                lambda l: loss_fn(base_params, l, micro))(lo)
+            lo, opt = optimizer.update(grads, opt, lo, update_mask=mask_fn)
+            lo = shard_lora_tree(lo)
+            return (lo, opt), loss
+
+        (lora_new, opt_new), losses = jax.lax.scan(
+            local_step, (lora, opt_state), batch)
+
+        # Joint mixing (Algorithm 1 lines 7–9): masks select per method.
+        lora_new = mix(W, lora_new, masks[2], masks[3])
+        lora_new = shard_lora_tree(lora_new)
+        metrics = {"loss": jnp.mean(losses), "loss_per_step": losses}
+        return lora_new, opt_new, metrics
+
+    return round_fn
+
+
+def make_microbatches(batch, local_steps: int):
+    """Reshape a round's batch (m, local_steps*b, ...) ->
+    (local_steps, m, b, ...) for the scan."""
+    def one(x):
+        m, tb = x.shape[:2]
+        b = tb // local_steps
+        return jnp.moveaxis(x.reshape(m, local_steps, b, *x.shape[2:]), 1, 0)
+    return jax.tree.map(one, batch)

@@ -1,0 +1,141 @@
+"""LoRA parameter trees (the paper's adaptation recipe).
+
+ΔW = a @ b with a: (d_in, r) ~ N(0, 1/d_in), b: (r, d_out) = 0
+(so ΔW = 0 at init), scale = alpha / r. Target leaves (paper: attention Q/V;
+extended per DESIGN.md §4 to the recurrent blocks' projections):
+
+  wq, wv          — attention / cross-attention / mLSTM q,v projections
+  w_in_x, w_out   — RG-LRU in/out projections
+  w_gates         — sLSTM gate projection
+
+A LoRA tree mirrors the params tree at targeted leaves only. With
+``n_clients`` set, every a/b leaf gains a client axis at position -3:
+  group-stacked leaves  (G, d_in, d_out)  ->  a: (G, m, d_in, r)
+  plain leaves          (d_in, d_out)     ->  a: (m, d_in, r)
+so gossip mixing is uniformly an einsum over axis -3 (core.mixing).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.dist.sharding import logical
+
+_RECURRENT_TARGETS = ("w_in_x", "w_out", "w_gates")
+
+
+def target_names(cfg: ModelConfig) -> frozenset[str]:
+    return frozenset(cfg.lora_targets) | frozenset(_RECURRENT_TARGETS)
+
+
+def build_lora_tree(key, params, cfg: ModelConfig,
+                    n_clients: Optional[int] = None,
+                    dtype=jnp.float32) -> dict:
+    """LoRA tree mirroring ``params`` at targeted leaves."""
+    targets = target_names(cfg)
+    r = cfg.lora_rank
+    counter = [0]
+
+    def make_ab(leaf):
+        d_in, d_out = leaf.shape[-2:]
+        lead = leaf.shape[:-2]
+        m = (n_clients,) if n_clients else ()
+        counter[0] += 1
+        k = jax.random.fold_in(key, counter[0])
+        a = jax.random.normal(k, (*lead, d_in, r)) / jnp.sqrt(d_in)
+        if m:
+            # identical init across clients (shared global starting point)
+            a = jnp.broadcast_to(a[..., None, :, :],
+                                 (*lead, *m, d_in, r)).copy()
+        b = jnp.zeros((*lead, *m, r, d_out))
+        return {"a": a.astype(dtype), "b": b.astype(dtype)}
+
+    def walk(node):
+        if isinstance(node, dict):
+            out = {}
+            for k, v in node.items():
+                if isinstance(v, (dict, list, tuple)):
+                    sub = walk(v)
+                    if sub is not None:
+                        out[k] = sub
+                elif k in targets and hasattr(v, "ndim") and v.ndim >= 2:
+                    out[k] = make_ab(v)
+            return out or None
+        if isinstance(node, (list, tuple)):
+            subs = [walk(v) for v in node]
+            return list(subs) if any(s is not None for s in subs) else None
+        return None
+
+    tree = walk(params)
+    return tree if tree is not None else {}
+
+
+def lora_specs(params_specs, cfg: ModelConfig,
+               n_clients: Optional[int] = None, dtype=jnp.float32):
+    """ShapeDtypeStruct LoRA tree (dry-run, no allocation)."""
+    return jax.eval_shape(
+        lambda: build_lora_tree(jax.random.key(0), params_specs, cfg,
+                                n_clients, dtype))
+
+
+def param_count(lora) -> int:
+    return sum(x.size for x in jax.tree.leaves(lora))
+
+
+def shard_lora_tree(lora):
+    """Apply logical sharding constraints: client axis over "clients",
+    d_in/d_out over "model" (rank never sharded)."""
+    def one(leaf):
+        if leaf.ndim == 4:        # (G, m, d, r) or (G, m, r, d)
+            names = (None, "clients", "model", None) if leaf.shape[-1] <= 64 \
+                else (None, "clients", None, "model")
+        elif leaf.ndim == 3:      # (m, d, r) / (m, r, d)
+            names = ("clients", "model", None) if leaf.shape[-1] <= 64 \
+                else ("clients", None, "model")
+        else:
+            names = (None,) * leaf.ndim
+        return logical(leaf, *names)
+    return jax.tree.map(one, lora)
+
+
+def client_slice(lora, i: int):
+    """Extract client i's LoRA tree (client axis at -3)."""
+    return jax.tree.map(lambda x: x[..., i, :, :], lora)
+
+
+def client_mean(lora):
+    """Average over the client axis (the ideal 'consensus model')."""
+    return jax.tree.map(lambda x: jnp.mean(x, axis=-3), lora)
+
+
+def merge_lora(params, lora, cfg: ModelConfig):
+    """Fold ΔW = scale * a@b into the base weights (single-client tree).
+    Returns a new params tree; used for serving a fine-tuned model."""
+    scale = cfg.lora_alpha / cfg.lora_rank
+
+    def walk(p_node, l_node):
+        if l_node is None:
+            return p_node
+        if isinstance(p_node, dict):
+            out = {}
+            for k, v in p_node.items():
+                lk = l_node.get(k) if isinstance(l_node, dict) else None
+                if (isinstance(lk, dict) and "a" in lk and "b" in lk
+                        and not isinstance(v, dict)):
+                    delta = jnp.einsum("...dr,...rf->...df", lk["a"], lk["b"])
+                    out[k] = (v + scale * delta).astype(v.dtype)
+                elif isinstance(v, (dict, list)):
+                    out[k] = walk(v, lk)
+                else:
+                    out[k] = v
+            return out
+        if isinstance(p_node, list):
+            ln = l_node if isinstance(l_node, list) else [None] * len(p_node)
+            return [walk(v, ln[i] if i < len(ln) else None)
+                    for i, v in enumerate(p_node)]
+        return p_node
+
+    return walk(params, lora)

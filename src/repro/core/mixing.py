@@ -1,0 +1,68 @@
+"""Gossip mixing of stacked client LoRA states (Algorithm 1, lines 7-9).
+
+Every LoRA leaf carries the client axis at position -3 (see core.lora), so
+mixing is uniformly  x'_i = Σ_j (W_t)_ij x_j  — an einsum contracting that
+axis. Under the production mesh the client axis is sharded over
+("pod","data"), so this einsum *is* the paper's communication step, lowered
+by GSPMD to collectives over the client axis.
+
+``mix_masks`` lets one compiled step express all four paper methods: a leaf
+is mixed when its mask is 1, left untouched when 0 (traced scalars, so the
+method/phase never triggers recompilation).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mix_leaf(W: jax.Array, leaf: jax.Array) -> jax.Array:
+    """leaf: (..., m, d0, d1); W: (m, m)."""
+    return jnp.einsum("ij,...jdr->...idr", W.astype(leaf.dtype), leaf)
+
+
+def mix_tree(W: jax.Array, lora, mask_a: jax.Array, mask_b: jax.Array):
+    """Gossip-mix the a-leaves with weight mask_a and b-leaves with mask_b.
+
+    mask=1 -> fully mixed; mask=0 -> untouched (frozen-block no-mix, i.e.
+    the RoLoRA baseline behaviour); fractional values interpolate (used by
+    the beyond-paper damped-mixing variant).
+    """
+    def one(path, leaf):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        mask = mask_a if name == "a" else mask_b
+        mixed = mix_leaf(W, leaf)
+        return (mask * mixed + (1.0 - mask) * leaf).astype(leaf.dtype)
+
+    return jax.tree_util.tree_map_with_path(one, lora)
+
+
+def mix_tree_concat(W: jax.Array, lora, mask_a: jax.Array, mask_b: jax.Array):
+    """Beyond-paper lowering variant (§Perf): flatten all leaves into one
+    (m, P) buffer, mix with a single matmul (one collective), then unflatten.
+    Numerically identical to mix_tree when masks are equal; with unequal
+    masks it falls back to per-leaf masking after the fused mix."""
+    leaves, treedef = jax.tree_util.tree_flatten(lora)
+    m = leaves[0].shape[-3]
+
+    def to2d(x):
+        # (..., m, d0, d1) -> (m, prod(lead)*d0*d1)
+        x = jnp.moveaxis(x, -3, 0)
+        return x.reshape(m, -1)
+
+    flat = jnp.concatenate([to2d(x) for x in leaves], axis=1)
+    mixed_flat = W.astype(flat.dtype) @ flat
+
+    out, off = [], 0
+    paths = jax.tree_util.tree_flatten_with_path(lora)[0]
+    for (path, leaf) in paths:
+        n = leaf.size // m
+        chunk = mixed_flat[:, off:off + n]
+        off += n
+        lead = leaf.shape[:-3]
+        restored = chunk.reshape(m, *lead, *leaf.shape[-2:])
+        restored = jnp.moveaxis(restored, 0, len(lead))
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        mask = mask_a if name == "a" else mask_b
+        out.append((mask * restored + (1.0 - mask) * leaf).astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,166 @@
+"""Communication topologies and time-varying mixing matrices W_t.
+
+Paper §IV-A / Appendix A-J: clients gossip through doubly-stochastic W_t
+with mean-square contraction E||W_t − (1/m)11ᵀ||² ≤ ρ². The experimental
+topology is Erdős–Rényi *edge activation*: each edge of an underlying graph
+fires independently with probability p each round, and every activated edge
+performs pairwise averaging (Lemma A.10) — giving 1−ρ ≥ c_mix·p·λ2(L).
+
+Implemented here:
+  * underlying graphs: complete (paper's main setting), ring (Table V),
+    arbitrary adjacency;
+  * per-round W_t sampling via sequential pairwise averaging in random order
+    (exactly Lemma A.10's model, so W_t is doubly stochastic by
+    construction);
+  * spectral diagnostics: λ2(L), ρ estimation (both the exact
+    ||E[WᵀW] − J||₂ route and Monte-Carlo), effective spectral gap.
+
+W_t is *data*, not code — the compiled DFL round consumes it as an input
+array, so dynamic graphs never trigger recompilation.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Iterator, Optional
+
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Underlying graphs
+# ---------------------------------------------------------------------------
+
+def complete_graph(m: int) -> np.ndarray:
+    a = np.ones((m, m)) - np.eye(m)
+    return a
+
+
+def ring_graph(m: int) -> np.ndarray:
+    a = np.zeros((m, m))
+    for i in range(m):
+        a[i, (i + 1) % m] = a[(i + 1) % m, i] = 1.0
+    return a
+
+
+def erdos_renyi_graph(m: int, q: float, rng: np.random.Generator) -> np.ndarray:
+    """Static ER graph with edge prob q (used as an underlying graph)."""
+    u = rng.random((m, m))
+    a = np.triu((u < q).astype(float), k=1)
+    return a + a.T
+
+
+def laplacian(adj: np.ndarray) -> np.ndarray:
+    return np.diag(adj.sum(1)) - adj
+
+
+def lambda2(adj: np.ndarray) -> float:
+    """Algebraic connectivity λ2(L)."""
+    ev = np.linalg.eigvalsh(laplacian(adj))
+    return float(ev[1]) if len(ev) > 1 else 0.0
+
+
+# ---------------------------------------------------------------------------
+# Edge-activation gossip (Lemma A.10)
+# ---------------------------------------------------------------------------
+
+def _edges(adj: np.ndarray) -> np.ndarray:
+    iu = np.triu_indices(adj.shape[0], k=1)
+    mask = adj[iu] > 0
+    return np.stack([iu[0][mask], iu[1][mask]], axis=1)
+
+
+def sample_mixing_matrix(adj: np.ndarray, p: float,
+                         rng: np.random.Generator) -> np.ndarray:
+    """One round's W_t: every edge activates w.p. p; activated edges apply
+    pairwise averaging in uniformly-random order (Lemma A.10). The product
+    of symmetric doubly-stochastic pairwise averagers is doubly stochastic."""
+    m = adj.shape[0]
+    W = np.eye(m)
+    edges = _edges(adj)
+    if len(edges) == 0:
+        return W
+    fired = edges[rng.random(len(edges)) < p]
+    if len(fired) == 0:
+        return W
+    order = rng.permutation(len(fired))
+    for idx in order:
+        i, j = fired[idx]
+        We = np.eye(m)
+        We[i, i] = We[j, j] = 0.5
+        We[i, j] = We[j, i] = 0.5
+        W = We @ W
+    return W
+
+
+@dataclass
+class Topology:
+    """A sampled-communication environment for one DFL run."""
+    adj: np.ndarray
+    p: float
+    seed: int = 0
+
+    def __post_init__(self):
+        self.m = self.adj.shape[0]
+        self._rng = np.random.default_rng(self.seed)
+
+    def sample(self) -> np.ndarray:
+        return sample_mixing_matrix(self.adj, self.p, self._rng)
+
+    def matrices(self, rounds: int) -> Iterator[np.ndarray]:
+        for _ in range(rounds):
+            yield self.sample()
+
+    # ---- spectral diagnostics -------------------------------------------
+    def lambda2(self) -> float:
+        return lambda2(self.adj)
+
+    def rho_estimate(self, n_samples: int = 200) -> float:
+        """Monte-Carlo estimate of ρ with E||W − J||₂² ≤ ρ²: uses the
+        top singular value of (W − J) per sample and averages the square
+        (the assumption is mean-square, Appendix A-A)."""
+        m = self.m
+        J = np.ones((m, m)) / m
+        rng = np.random.default_rng(self.seed + 12345)
+        vals = []
+        for _ in range(n_samples):
+            W = sample_mixing_matrix(self.adj, self.p, rng)
+            s = np.linalg.norm(W - J, ord=2)
+            vals.append(s * s)
+        return float(np.sqrt(np.mean(vals)))
+
+    def spectral_gap(self, n_samples: int = 200) -> float:
+        return 1.0 - self.rho_estimate(n_samples)
+
+
+def make_topology(kind: str, m: int, p: float, seed: int = 0,
+                  er_q: float = 0.5) -> Topology:
+    if kind == "complete":
+        adj = complete_graph(m)
+    elif kind == "ring":
+        adj = ring_graph(m)
+    elif kind == "erdos_renyi":
+        adj = erdos_renyi_graph(m, er_q, np.random.default_rng(seed + 777))
+    else:
+        raise ValueError(kind)
+    return Topology(adj=adj, p=p, seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# Topology-aware switching interval (the paper's headline formula)
+# ---------------------------------------------------------------------------
+
+def optimal_switching_interval(rho: float, *, c: float = 1.0,
+                               t_min: int = 1, t_max: int = 64) -> int:
+    """T*(ρ) ≍ c/√(1−ρ)  (Theorem V.3 / Corollary A.9)."""
+    gap = max(1.0 - rho, 1e-6)
+    t = int(round(c / np.sqrt(gap)))
+    return int(np.clip(t, t_min, t_max))
+
+
+def optimal_switching_interval_edge_activation(
+        p: float, lam2: float, *, c: float = 1.0, c_mix: float = 0.5,
+        t_min: int = 1, t_max: int = 64) -> int:
+    """T*(p, L) ≍ c/√(p·λ2(L))  (Corollary A.11): 1−ρ ≥ c_mix·p·λ2(L)."""
+    gap = max(c_mix * p * lam2, 1e-6)
+    t = int(round(c / np.sqrt(gap)))
+    return int(np.clip(t, t_min, t_max))

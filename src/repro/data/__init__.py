@@ -1,0 +1,6 @@
+from repro.data.synthetic import (SyntheticTask, federated_batches,
+                                  label_skew_partitions, lm_token_stream,
+                                  make_task)
+
+__all__ = ["SyntheticTask", "federated_batches", "label_skew_partitions",
+           "lm_token_stream", "make_task"]

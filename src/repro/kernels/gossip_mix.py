@@ -1,0 +1,49 @@
+"""Gossip-mixing Pallas kernel — Algorithm 1 lines 7–9 as one fused pass.
+
+y = W_eff @ X with W_eff = mask·W_t + (1−mask)·I (mask folding happens in
+ops.py so LORA/FFA/ROLORA/TAD all reduce to a plain blocked matmul), where
+X is the (m, P) buffer of all client LoRA factors flattened and
+concatenated (both blocks → ONE kernel pass / ONE upstream collective,
+the joint-mixing step the paper adds).
+
+m (clients) is small (10–64): W_eff stays whole in VMEM; the grid streams
+P in bp-wide stripes. VPU/MXU work is trivial — the kernel exists to make
+the mixing a single fused HBM sweep instead of per-leaf dispatches.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(w_ref, x_ref, o_ref):
+    o_ref[...] = jnp.dot(w_ref[...].astype(jnp.float32),
+                         x_ref[...].astype(jnp.float32),
+                         preferred_element_type=jnp.float32
+                         ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bp", "interpret"))
+def gossip_mix(w_eff: jax.Array, x: jax.Array, *, bp: int = 512,
+               interpret: bool = False) -> jax.Array:
+    """w_eff: (m, m); x: (m, P) -> (m, P). P padded to bp upstream."""
+    m, P = x.shape
+    bp = min(bp, P)
+    assert P % bp == 0, (P, bp)
+    return pl.pallas_call(
+        _kernel,
+        grid=(P // bp,),
+        in_specs=[
+            pl.BlockSpec((m, m), lambda j: (0, 0)),
+            pl.BlockSpec((m, bp), lambda j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((m, bp), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((m, P), x.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(w_eff, x)

@@ -1,0 +1,80 @@
+"""Jit'd dispatching wrappers around the Pallas kernels.
+
+On TPU the Pallas path compiles natively; elsewhere (this CPU container)
+``ops`` falls back to the ref oracles so the framework runs everywhere.
+``force="pallas_interpret"`` routes through the kernels in interpret mode
+(used by tests to validate kernel bodies on CPU).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.gossip_mix import gossip_mix as _gossip
+from repro.kernels.lora_matmul import lora_matmul as _lora_mm
+from repro.kernels.rglru_scan import rglru_scan as _rglru
+
+_FORCE: Optional[str] = None   # None | "ref" | "pallas_interpret"
+
+
+def set_backend(force: Optional[str]) -> None:
+    global _FORCE
+    assert force in (None, "ref", "pallas_interpret"), force
+    _FORCE = force
+
+
+def _mode() -> str:
+    if _FORCE == "ref":
+        return "ref"
+    if _FORCE == "pallas_interpret":
+        return "interpret"
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def lora_matmul(x, w, a, b, scale: float = 1.0):
+    m = _mode()
+    if m == "ref":
+        return ref.lora_matmul_ref(x, w, a, b, scale)
+    return _lora_mm(x, w, a, b, scale, interpret=(m == "interpret"))
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None, n_kv_heads: Optional[int] = None):
+    """q: (B, H, S, d); k/v: (B, KV, L, d) — GQA repeat handled here."""
+    if n_kv_heads and n_kv_heads != q.shape[1]:
+        rep = q.shape[1] // n_kv_heads
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    m = _mode()
+    if m == "ref":
+        return ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    return _flash(q, k, v, causal=causal, window=window,
+                  interpret=(m == "interpret"))
+
+
+def gossip_mix_flat(w: jax.Array, x: jax.Array, mask: jax.Array | float = 1.0):
+    """Mix a flattened (m, P) client buffer: y = (mask·W + (1−mask)·I) @ x."""
+    m_ = x.shape[0]
+    eye = jnp.eye(m_, dtype=w.dtype)
+    w_eff = mask * w + (1.0 - mask) * eye
+    mode = _mode()
+    if mode == "ref":
+        return ref.gossip_mix_ref(w_eff, x)
+    P = x.shape[1]
+    bp = 512
+    pad = (-P) % bp
+    if pad:
+        x_p = jnp.pad(x, ((0, 0), (0, pad)))
+        return _gossip(w_eff, x_p, interpret=(mode == "interpret"))[:, :P]
+    return _gossip(w_eff, x, interpret=(mode == "interpret"))
+
+
+def rglru_scan(a, u):
+    m = _mode()
+    if m == "ref":
+        return ref.rglru_scan_ref(a, u)
+    return _rglru(a, u, interpret=(m == "interpret"))

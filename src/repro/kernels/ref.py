@@ -1,0 +1,65 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+Each function mirrors its kernel's contract exactly; tests sweep
+shapes/dtypes and assert allclose between kernel (interpret=True on CPU,
+compiled on TPU) and these references.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def lora_matmul_ref(x: jax.Array, w: jax.Array, a: jax.Array, b: jax.Array,
+                    scale: float) -> jax.Array:
+    """y = x @ w + scale * (x @ a) @ b.
+    x: (M, K), w: (K, N), a: (K, r), b: (r, N)."""
+    y = x.astype(jnp.float32) @ w.astype(jnp.float32)
+    y = y + scale * ((x.astype(jnp.float32) @ a.astype(jnp.float32))
+                     @ b.astype(jnp.float32))
+    return y.astype(x.dtype)
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True,
+                        window: Optional[int] = None) -> jax.Array:
+    """Naive attention. q: (B, H, S, d), k/v: (B, H, L, d) (heads already
+    expanded — GQA repeat happens in ops)."""
+    B, H, S, d = q.shape
+    L = k.shape[2]
+    scores = jnp.einsum("bhsd,bhld->bhsl", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / jnp.sqrt(float(d))
+    q_pos = jnp.arange(S)[:, None]
+    k_pos = jnp.arange(L)[None, :]
+    mask = jnp.ones((S, L), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= q_pos - k_pos < window
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhsl,bhld->bhsd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def gossip_mix_ref(w_eff: jax.Array, x: jax.Array) -> jax.Array:
+    """y = w_eff @ x. w_eff: (m, m) pre-masked mixing matrix
+    (mask*W + (1-mask)*I); x: (m, P) stacked flattened client params."""
+    return (w_eff.astype(jnp.float32) @ x.astype(jnp.float32)).astype(x.dtype)
+
+
+def rglru_scan_ref(a: jax.Array, u: jax.Array) -> jax.Array:
+    """h_t = a_t * h_{t-1} + u_t (h_{-1}=0), along axis 1.
+    a, u: (B, T, W) -> h: (B, T, W)."""
+    def step(h, au):
+        at, ut = au
+        h = at * h + ut
+        return h, h
+    a32 = a.astype(jnp.float32)
+    u32 = u.astype(jnp.float32)
+    h0 = jnp.zeros((a.shape[0], a.shape[2]), jnp.float32)
+    _, hs = jax.lax.scan(step, h0, (jnp.moveaxis(a32, 1, 0),
+                                    jnp.moveaxis(u32, 1, 0)))
+    return jnp.moveaxis(hs, 0, 1).astype(u.dtype)

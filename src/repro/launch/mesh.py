@@ -1,0 +1,46 @@
+"""Production meshes.
+
+Single pod: (16, 16) = 256 chips, axes ("data", "model") — clients/FSDP on
+"data", tensor parallel on "model". Multi-pod: (2, 16, 16) = 512 chips with
+a leading "pod" axis that extends the client axis across the DCN boundary
+(gossip between pods = the paper's inter-site links).
+
+Functions, not module constants — importing this module never touches jax
+device state. Meshes are built from a prefix of jax.devices() so a 512-way
+forced host platform can carve both meshes.
+"""
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = math.prod(shape)
+    devs = jax.devices()
+    if len(devs) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}; have {len(devs)}. "
+            f"Set XLA_FLAGS=--xla_force_host_platform_device_count=512 "
+            f"BEFORE importing jax (launch/dryrun.py does this).")
+    return Mesh(np.array(devs[:n]).reshape(shape), axes)
+
+
+def make_debug_mesh(shape=(2, 2), axes=("data", "model")) -> Mesh:
+    """Small mesh for tests (requires forced device count >= prod(shape))."""
+    n = math.prod(shape)
+    return Mesh(np.array(jax.devices()[:n]).reshape(shape), axes)
+
+
+def client_count(mesh: Mesh) -> int:
+    """Simulated DFL clients = product of client axes (pod × data)."""
+    m = mesh.shape["data"]
+    if "pod" in mesh.axis_names:
+        m *= mesh.shape["pod"]
+    return m

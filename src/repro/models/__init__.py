@@ -1,0 +1,6 @@
+from repro.models.transformer import (decode_step, forward, init_cache,
+                                      init_params, lm_loss, param_specs,
+                                      prefill)
+
+__all__ = ["decode_step", "forward", "init_cache", "init_params", "lm_loss",
+           "param_specs", "prefill"]

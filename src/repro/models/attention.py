@@ -1,0 +1,287 @@
+"""Grouped-query attention: global / sliding-window / cross, train + decode.
+
+Memory strategy (dry-run-safe at 32k prefill):
+ - queries are chunked with lax.scan when S >= _CHUNK_THRESHOLD;
+ - chunk bodies are rematerialized (jax.checkpoint) so AD through the scan
+   does not retain per-chunk score tensors;
+ - scores shard over kv-heads ("model") when divisible, else over the KV
+   length ("seq") — sequence-parallel softmax via GSPMD collectives;
+ - sliding-window prefill restricts each q-chunk to a banded KV slice.
+
+Decode uses a rolling cache: {"k": (B, L, KV, hd), "v": ..., "t": ()} with
+write slot t % L; keys are stored post-RoPE (absolute positions at write
+time), so rolling overwrite needs no re-rotation.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.dist.sharding import axis_size, logical
+from repro.models.common import apply_rope, dense_init, rmsnorm, zeros
+from repro.models.layers import lora_linear, shard_act
+
+_CHUNK_THRESHOLD = 2048
+_Q_CHUNK = 1024
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+def init_attn(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    d, hd = cfg.d_model, cfg.hd
+    q_dim, kv_dim = cfg.n_heads * hd, cfg.n_kv_heads * hd
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d, q_dim, dtype),
+        "wk": dense_init(ks[1], d, kv_dim, dtype),
+        "wv": dense_init(ks[2], d, kv_dim, dtype),
+        "wo": dense_init(ks[3], q_dim, d, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = zeros(q_dim, dtype=dtype)
+        p["bk"] = zeros(kv_dim, dtype=dtype)
+        p["bv"] = zeros(kv_dim, dtype=dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Score/attend core (grouped heads, no kv materialized repeat)
+# ---------------------------------------------------------------------------
+
+def _scores_spec(n_kv: int, n_groups: int):
+    """Sharding for scores (B, KV, G, Sq, L): TP over kv-heads when they
+    divide the model axis, else over head-groups (MQA: KV=1, G=heads),
+    else fully LOCAL (batch only). Never shard L: sequence-sharded softmax
+    made GSPMD all-gather K/V slices inside the q-chunk scan (measured
+    ~180 GB/step in the gemma3 dry-run — EXPERIMENTS.md §Perf iter 3)."""
+    model_n = axis_size("model")
+    if model_n > 1 and n_kv % model_n == 0:
+        return ("batch", "model", None, None, None)
+    if model_n > 1 and n_groups % model_n == 0:
+        return ("batch", None, "model", None, None)
+    # Non-divisible heads: leave scores unconstrained. History (§Perf):
+    # forced-replicated fallback gathered probs/masks (~255 GB/step,
+    # iter 5); forced q-dim sharding exploded qwen2 prefill to 2.3e3 s
+    # (pair-B iter 1, REFUTED). The input-side fix (replicating q/k/v per
+    # layer, pair-B iter 2) steers GSPMD instead.
+    return None
+
+
+def _attend(q, k, v, mask, n_kv: int):
+    """q: (B, Sq, H, hd); k/v: (B, L, KV, hd); mask broadcastable to
+    (B, 1, 1, Sq, L) or None. Returns (B, Sq, H, hd)."""
+    B, Sq, H, hd = q.shape
+    L = k.shape[1]
+    G = H // n_kv
+    qg = q.reshape(B, Sq, n_kv, G, hd)
+    scores = jnp.einsum("bskgh,blkh->bkgsl", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) / math.sqrt(hd)
+    spec = _scores_spec(n_kv, G)
+    if spec is not None:
+        scores = logical(scores, *spec)
+    if mask is not None:
+        scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgsl,blkh->bskgh", probs, v.astype(jnp.float32))
+    return out.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+def _band_mask(q_pos, k_pos, *, causal: bool, window: Optional[int]):
+    """(Sq, L) boolean mask from absolute positions."""
+    m = jnp.ones((q_pos.shape[0], k_pos.shape[0]), dtype=bool)
+    if causal:
+        m &= k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        m &= q_pos[:, None] - k_pos[None, :] < window
+    return m
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def attn_forward(params: dict, cfg: ModelConfig, x: jax.Array, *,
+                 window: Optional[int] = None, causal: bool = True,
+                 lora: Optional[dict] = None, positions=None,
+                 memory: Optional[jax.Array] = None,
+                 return_kv: bool = False):
+    """x: (..., S, d). Cross-attention when ``memory`` is given (K/V from
+    memory, no RoPE, bidirectional over memory)."""
+    scale = cfg.lora_alpha / cfg.lora_rank
+    lq = (lora or {}).get("wq")
+    lk = (lora or {}).get("wk")
+    lv = (lora or {}).get("wv")
+    hd = cfg.hd
+
+    q = lora_linear(x, params["wq"], lq, scale, params.get("bq"))
+    kv_src = memory if memory is not None else x
+    k = lora_linear(kv_src, params["wk"], lk, scale, params.get("bk"))
+    v = lora_linear(kv_src, params["wv"], lv, scale, params.get("bv"))
+
+    lead = x.shape[:-2]          # leading dims (e.g. clients) beyond batch
+    S = x.shape[-2]
+    L = kv_src.shape[-2]
+    q = q.reshape(*lead, S, cfg.n_heads, hd)
+    k = k.reshape(*lead, L, cfg.n_kv_heads, hd)
+    v = v.reshape(*lead, L, cfg.n_kv_heads, hd)
+
+    if memory is None:  # self-attention: RoPE
+        if positions is None:
+            positions = jnp.arange(S)
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+
+    # collapse leading dims to one batch axis for the core
+    B = math.prod(lead) if lead else 1
+    qf = q.reshape(B, S, cfg.n_heads, hd)
+    kf = k.reshape(B, L, cfg.n_kv_heads, hd)
+    vf = v.reshape(B, L, cfg.n_kv_heads, hd)
+
+    G = cfg.n_heads // cfg.n_kv_heads
+    model_n = axis_size("model")
+    if (model_n > 1 and cfg.n_kv_heads % model_n and G % model_n
+            and memory is None):
+        # heads don't divide the TP axis: replicate q/k/v ONCE per layer
+        # (cheap: per-layer gather) so GSPMD cannot partial-sum the hd
+        # contraction and all-reduce full score tensors per q-chunk
+        # (measured 1.68 TB/step on qwen2 prefill — §Perf pair-B iter 2)
+        rep = lambda z: logical(z, "batch", *((None,) * (z.ndim - 1)))
+        qf, kf, vf = rep(qf), rep(kf), rep(vf)
+
+    if memory is not None:
+        out = _attend(qf, kf, vf, None, cfg.n_kv_heads)
+    elif S < _CHUNK_THRESHOLD:
+        mask = _band_mask(jnp.arange(S), jnp.arange(L), causal=causal,
+                          window=window)
+        out = _attend(qf, kf, vf, mask[None, None, None], cfg.n_kv_heads)
+    else:
+        out = _chunked_attend(qf, kf, vf, cfg.n_kv_heads, causal=causal,
+                              window=window)
+
+    out = out.reshape(*lead, S, cfg.n_heads * hd)
+    out = lora_linear(out, params["wo"], (lora or {}).get("wo"), scale)
+    out = shard_act(out)
+    if return_kv:
+        return out, (k, v)
+    return out
+
+
+def _chunked_attend(q, k, v, n_kv: int, *, causal: bool,
+                    window: Optional[int]):
+    """lax.scan over q chunks; banded KV slice when windowed."""
+    B, S, H, hd = q.shape
+    L = k.shape[1]
+    C = _Q_CHUNK if L <= 8192 else _Q_CHUNK // 4   # bound live score bytes
+    n_chunks = S // C
+    assert S % C == 0, (S, C)
+
+    if window is not None and causal and L == S:
+        # round the band up to a multiple of C for static slicing
+        band = min(L, (math.ceil(window / C) + 1) * C)
+    else:
+        band = None
+
+    @jax.checkpoint
+    def body(_, idx):
+        q_start = idx * C
+        qc = jax.lax.dynamic_slice_in_dim(q, q_start, C, axis=1)
+        q_pos = q_start + jnp.arange(C)
+        if band is not None:
+            k_start = jnp.maximum(q_start + C - band, 0)
+            kc = jax.lax.dynamic_slice_in_dim(k, k_start, band, axis=1)
+            vc = jax.lax.dynamic_slice_in_dim(v, k_start, band, axis=1)
+            k_pos = k_start + jnp.arange(band)
+        else:
+            kc, vc, k_pos = k, v, jnp.arange(L)
+        mask = _band_mask(q_pos, k_pos, causal=causal, window=window)
+        out = _attend(qc, kc, vc, mask[None, None, None], n_kv)
+        return None, out
+
+    _, chunks = jax.lax.scan(body, None, jnp.arange(n_chunks))
+    # chunks: (n_chunks, B, C, H, hd) -> (B, S, H, hd)
+    return jnp.moveaxis(chunks, 0, 1).reshape(B, S, H, hd)
+
+
+# ---------------------------------------------------------------------------
+# Decode (one token, rolling cache)
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               window: Optional[int] = None, dtype=jnp.float32) -> dict:
+    """Rolling KV cache with PER-SLOT position counters "t" (B,) — each
+    batch row is an independent serving slot (continuous batching:
+    launch/serving.py admits/evicts requests per row)."""
+    L = min(window, max_len) if window else max_len
+    kv, hd = cfg.n_kv_heads, cfg.hd
+    return {
+        "k": zeros(batch, L, kv, hd, dtype=dtype),
+        "v": zeros(batch, L, kv, hd, dtype=dtype),
+        "t": jnp.zeros((batch,), dtype=jnp.int32),
+    }
+
+
+def cache_spec(cfg: ModelConfig, batch: int, max_len: int,
+               window: Optional[int] = None, dtype=jnp.float32) -> dict:
+    """ShapeDtypeStruct version of init_cache (dry-run, no allocation)."""
+    L = min(window, max_len) if window else max_len
+    kv, hd = cfg.n_kv_heads, cfg.hd
+    f = jax.ShapeDtypeStruct
+    return {
+        "k": f((batch, L, kv, hd), dtype),
+        "v": f((batch, L, kv, hd), dtype),
+        "t": f((batch,), jnp.int32),
+    }
+
+
+def attn_decode(params: dict, cfg: ModelConfig, x: jax.Array, cache: dict, *,
+                window: Optional[int] = None, lora: Optional[dict] = None,
+                cross_kv: Optional[tuple] = None):
+    """x: (B, 1, d). Returns (out, new_cache). With ``cross_kv`` (k, v) the
+    layer is cross-attention (static memory KV, cache untouched)."""
+    scale = cfg.lora_alpha / cfg.lora_rank
+    hd = cfg.hd
+    B = x.shape[0]
+    q = lora_linear(x, params["wq"], (lora or {}).get("wq"), scale,
+                    params.get("bq"))
+    q = q.reshape(B, 1, cfg.n_heads, hd)
+
+    if cross_kv is not None:
+        k, v = cross_kv
+        out = _attend(q, k, v, None, cfg.n_kv_heads)
+        out = out.reshape(B, 1, cfg.n_heads * hd)
+        out = lora_linear(out, params["wo"], (lora or {}).get("wo"), scale)
+        return shard_act(out), cache
+
+    t = cache["t"]                                     # (B,) per-slot pos
+    k_new = lora_linear(x, params["wk"], (lora or {}).get("wk"), scale,
+                        params.get("bk")).reshape(B, 1, cfg.n_kv_heads, hd)
+    v_new = lora_linear(x, params["wv"], (lora or {}).get("wv"), scale,
+                        params.get("bv")).reshape(B, 1, cfg.n_kv_heads, hd)
+    pos = t[:, None].astype(jnp.float32)               # (B, 1)
+    q = apply_rope(q, pos, cfg.rope_theta)
+    k_new = apply_rope(k_new, pos, cfg.rope_theta)
+
+    L = cache["k"].shape[1]
+    slot = (t % L).astype(jnp.int32)                   # (B,)
+    rows = jnp.arange(B)
+    k_cache = cache["k"].at[rows, slot].set(
+        k_new[:, 0].astype(cache["k"].dtype))
+    v_cache = cache["v"].at[rows, slot].set(
+        v_new[:, 0].astype(cache["v"].dtype))
+    k_cache = logical(k_cache, "batch", "seq", None, None)
+    v_cache = logical(v_cache, "batch", "seq", None, None)
+
+    valid = jnp.arange(L)[None, :] < jnp.minimum(t + 1, L)[:, None]  # (B,L)
+    mask = valid[:, None, None, None, :]
+    out = _attend(q, k_cache, v_cache, mask, cfg.n_kv_heads)
+    out = out.reshape(B, 1, cfg.n_heads * hd)
+    out = lora_linear(out, params["wo"], (lora or {}).get("wo"), scale)
+    new_cache = {"k": k_cache, "v": v_cache, "t": t + 1}
+    return shard_act(out), new_cache

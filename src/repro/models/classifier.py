@@ -1,0 +1,88 @@
+"""Sequence classifier for the paper-faithful experiments.
+
+The paper fine-tunes RoBERTa-large (bidirectional encoder) with LoRA on Q/V
+and a FROZEN classification head on GLUE tasks. This wrapper reproduces that
+shape at any scale: a bidirectional encoder built from the same substrate
+layers, mean-pooling, and a frozen linear head. Only the LoRA tree is
+trainable — exactly the paper's setting.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ATTN, DENSE, LayerSpec, ModelConfig
+from repro.models import attention as attn_mod
+from repro.models.common import dense_init, embed_tokens, init_mlp, mlp, rmsnorm, zeros
+from repro.models.transformer import _init_layer
+
+
+def encoder_config(n_layers=2, d_model=64, n_heads=4, d_ff=128,
+                   vocab_size=512, n_classes=2, lora_rank=4,
+                   lora_alpha=8.0) -> ModelConfig:
+    return ModelConfig(
+        name=f"encoder-cls-{n_layers}L{d_model}d",
+        family="decoder",
+        n_layers=n_layers,
+        d_model=d_model,
+        n_heads=n_heads,
+        n_kv_heads=n_heads,
+        d_ff=d_ff,
+        vocab_size=vocab_size,
+        pattern=(LayerSpec(kind=ATTN, ffn=DENSE),),
+        lora_rank=lora_rank,
+        lora_alpha=lora_alpha,
+        citation="paper setup §VI-A (RoBERTa-large + LoRA r=8 on Q/V, "
+                 "frozen head), reduced for CPU-scale validation",
+    )
+
+
+def init_classifier(key, cfg: ModelConfig, n_classes: int,
+                    dtype=jnp.float32) -> dict:
+    kE, kL, kH = jax.random.split(key, 3)
+    layers = [
+        _init_layer(jax.random.fold_in(kL, j), cfg, cfg.pattern[0], dtype,
+                    encdec_cross=False)
+        for j in range(cfg.n_layers)
+    ]
+    return {
+        "embed": (jax.random.normal(kE, (cfg.vocab_padded, cfg.d_model)) *
+                  0.02).astype(dtype),
+        "layers": layers,
+        "final_norm": zeros(cfg.d_model, dtype=dtype),
+        "head": dense_init(kH, cfg.d_model, n_classes, dtype),  # FROZEN
+    }
+
+
+def classifier_forward(params: dict, cfg: ModelConfig, tokens: jax.Array,
+                       lora: Optional[dict] = None) -> jax.Array:
+    """tokens: (..., S) -> class logits (..., n_classes). Bidirectional."""
+    x = embed_tokens(params["embed"], tokens) * math.sqrt(cfg.d_model)
+    lo_layers = (lora or {}).get("layers", [None] * cfg.n_layers)
+    for j, p in enumerate(params["layers"]):
+        h = rmsnorm(x, p["norm1"], cfg.norm_eps)
+        lj = lo_layers[j] or {}
+        x = x + attn_mod.attn_forward(p["attn"], cfg, h, causal=False,
+                                      lora=lj.get("attn"))
+        h = rmsnorm(x, p["norm2"], cfg.norm_eps)
+        x = x + mlp(p["ffn"], h, cfg.act)
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    pooled = jnp.mean(x, axis=-2)
+    return pooled @ params["head"]
+
+
+def classifier_loss(params: dict, cfg: ModelConfig, tokens: jax.Array,
+                    labels: jax.Array, lora: Optional[dict] = None):
+    logits = classifier_forward(params, cfg, tokens, lora).astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    tgt = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - tgt)
+
+
+def classifier_accuracy(params: dict, cfg: ModelConfig, tokens: jax.Array,
+                        labels: jax.Array, lora: Optional[dict] = None):
+    logits = classifier_forward(params, cfg, tokens, lora)
+    return jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))

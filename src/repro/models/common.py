@@ -1,0 +1,116 @@
+"""Shared building blocks: init, norms, RoPE, gated MLP."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import logical
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32) -> jax.Array:
+    scale = 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out)) * scale).astype(dtype)
+
+
+def stacked_dense_init(key, n: int, d_in: int, d_out: int, dtype=jnp.float32):
+    scale = 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (n, d_in, d_out)) * scale).astype(dtype)
+
+
+def zeros(*shape, dtype=jnp.float32):
+    return jnp.zeros(shape, dtype=dtype)
+
+
+def ones(*shape, dtype=jnp.float32):
+    return jnp.ones(shape, dtype=dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jax.Array, gamma: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + gamma.astype(jnp.float32))).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    dt = x.dtype
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs   # (..., S, hd/2)
+    cos = jnp.cos(ang)[..., None, :]                    # (..., S, 1, hd/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x32 = x.astype(jnp.float32)
+    x1, x2 = jnp.split(x32, 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Gated MLP (SwiGLU / GeGLU)
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d: int, d_ff: int, dtype=jnp.float32) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wi_gate": dense_init(k1, d, d_ff, dtype),
+        "wi_up": dense_init(k2, d, d_ff, dtype),
+        "wo": dense_init(k3, d_ff, d, dtype),
+    }
+
+
+def mlp(params: dict, x: jax.Array, act: str = "silu") -> jax.Array:
+    h_gate = x @ params["wi_gate"]
+    h_up = x @ params["wi_up"]
+    # NB: None dims in a sharding constraint mean REPLICATED — the batch
+    # dim must be named or GSPMD all-gathers the client axis (§Perf iter 4)
+    h_gate = logical(h_gate, "batch", *((None,) * (h_gate.ndim - 2)),
+                     "model")
+    act_fn = jax.nn.silu if act == "silu" else jax.nn.gelu
+    h = act_fn(h_gate) * h_up
+    out = h @ params["wo"]
+    # row-parallel output: all-reduced, unsharded on d (sequence-sharded
+    # under the seq-parallel §Perf variant)
+    from repro.models.layers import shard_act
+    return shard_act(out)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def embed_tokens(embed: jax.Array, tokens: jax.Array) -> jax.Array:
+    return jnp.take(embed, tokens, axis=0)
+
+
+def unembed(x: jax.Array, embed_or_w: jax.Array, tied: bool,
+            softcap: float = 0.0) -> jax.Array:
+    if tied:
+        logits = x @ embed_or_w.T
+    else:
+        logits = x @ embed_or_w
+    logits = logical(logits, "batch", *((None,) * (logits.ndim - 2)),
+                     "model")
+    if softcap > 0:
+        logits = jnp.tanh(logits / softcap) * softcap
+    return logits

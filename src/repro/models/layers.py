@@ -1,0 +1,56 @@
+"""Linear application with optional LoRA path + activation sharding helpers.
+
+LoRA convention (paper: ΔW = B·A; our storage is transposed to match the
+(d_in, d_out) weight layout): a: (d_in, r), b: (r, d_out),
+ΔW = a @ b, y = x@W + scale * (x@a)@b, scale = alpha / r.
+
+A LoRA leaf may carry a leading *client* axis (m, d_in, r) when the input
+carries a matching leading client axis (federated stacked evaluation) and/or
+a leading scan-group axis handled by lax.scan slicing upstream.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import logical
+
+
+def lora_linear(x: jax.Array, w: jax.Array, lora: Optional[dict] = None,
+                scale: float = 1.0, bias: Optional[jax.Array] = None):
+    y = jnp.einsum("...d,df->...f", x, w)
+    if lora is not None:
+        # compute the low-rank path in the activation dtype (bf16 on pod):
+        # f32 master copies live in the optimizer; promoting x to f32 here
+        # made GSPMD all-gather full activations (see EXPERIMENTS.md §Perf).
+        a = lora["a"].astype(x.dtype)
+        b = lora["b"].astype(x.dtype)
+        if a.ndim == 3:
+            # client-stacked LoRA: x (m, ..., d), a (m, d, r), b (m, r, f)
+            xa = jnp.einsum("m...d,mdr->m...r", x, a)
+            y = y + jnp.einsum("m...r,mrf->m...f", xa, b) * scale
+        else:
+            y = y + ((x @ a) @ b) * scale
+    if bias is not None:
+        y = y + bias
+    return y
+
+
+def shard_act(x: jax.Array, last: Optional[str] = None) -> jax.Array:
+    """Constrain an activation: leading dim over batch/clients; block
+    outputs stay unsharded on d (Megatron all-reduced row-parallel output),
+    intermediates pass last="model".
+
+    When the bound axis map defines "seq_act" (sequence parallelism —
+    §Perf variant), residual-stream activations additionally shard the
+    sequence dim: all-reduces become reduce-scatter + all-gather pairs and
+    the remat carry is stored sequence-sharded."""
+    names: list = [None] * x.ndim
+    if x.ndim >= 2:
+        names[0] = "batch"
+    if x.ndim >= 3 and last is None:
+        names[-2] = "seq_act"   # unmapped in the baseline -> no-op
+    names[-1] = last
+    return logical(x, *names)

@@ -1,0 +1,128 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+Block: norm -> two input branches (gate branch with GeLU; recurrence branch
+with short temporal conv + RG-LRU) -> elementwise merge -> out projection.
+
+RG-LRU recurrence (diagonal, per-channel):
+    r_t = sigmoid(W_a x_t + b_a)              (recurrence gate)
+    i_t = sigmoid(W_x x_t + b_x)              (input gate)
+    a_t = exp(-c * softplus(Lambda) * r_t)    (decay in (0,1), c=8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Training/prefill uses an associative scan over the time axis (log-depth,
+shardable); decode carries (h, conv buffer) state.  LoRA targets the in/out
+projections (the technique applies to any linear map — DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import dense_init, zeros
+from repro.models.layers import lora_linear, shard_act
+
+_C = 8.0
+
+
+def init_rglru(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    d = cfg.d_model
+    w = cfg.rglru_width or d
+    ks = jax.random.split(key, 6)
+    # Lambda init so that a ~ uniform-ish decay in (0.9, 0.999)
+    lam = jax.random.uniform(ks[5], (w,), minval=2.0, maxval=6.0)
+    return {
+        "w_in_x": dense_init(ks[0], d, w, dtype),     # recurrence branch
+        "w_in_g": dense_init(ks[1], d, w, dtype),     # gate branch
+        "conv_w": (jax.random.normal(ks[2], (cfg.conv1d_width, w)) *
+                   0.1).astype(dtype),
+        "conv_b": zeros(w, dtype=dtype),
+        "w_gate_r": dense_init(ks[3], w, w, dtype),   # recurrence gate
+        "w_gate_i": dense_init(ks[4], w, w, dtype),   # input gate
+        "b_gate_r": zeros(w, dtype=dtype),
+        "b_gate_i": zeros(w, dtype=dtype),
+        "lam": lam.astype(dtype),
+        "w_out": dense_init(jax.random.fold_in(key, 7), w, d, dtype),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 state: jax.Array | None = None):
+    """Depthwise causal conv over time. x: (..., S, w); w: (K, w).
+    With ``state`` (..., K-1, w) from decode, prepends it instead of zeros."""
+    K = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((*x.shape[:-2], K - 1, x.shape[-1]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=-2)
+    out = sum(xp[..., k:k + x.shape[-2], :] * w[k] for k in range(K))
+    return out + b, xp[..., -(K - 1):, :]
+
+
+def _rglru_gates(params: dict, xr: jax.Array):
+    r = jax.nn.sigmoid(xr @ params["w_gate_r"] + params["b_gate_r"])
+    i = jax.nn.sigmoid(xr @ params["w_gate_i"] + params["b_gate_i"])
+    log_a = (-_C * jax.nn.softplus(params["lam"].astype(jnp.float32)) *
+             r.astype(jnp.float32))                  # log a_t  (<0)
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    u = beta * (i.astype(jnp.float32) * xr.astype(jnp.float32))
+    return a, u
+
+
+def rglru_scan(a: jax.Array, u: jax.Array, h0: jax.Array | None = None):
+    """Solve h_t = a_t h_{t-1} + u_t over axis -2 via associative scan."""
+    if h0 is not None:
+        u = u.at[..., 0, :].add(a[..., 0, :] * h0)
+
+    def comb(c1, c2):
+        (a1, u1), (a2, u2) = c1, c2
+        return a1 * a2, a2 * u1 + u2
+
+    a_c, h = jax.lax.associative_scan(comb, (a, u), axis=-2)
+    return h
+
+
+def rglru_forward(params: dict, cfg: ModelConfig, x: jax.Array,
+                  lora: dict | None = None):
+    """x: (..., S, d) -> (..., S, d). Full-sequence path."""
+    scale = cfg.lora_alpha / cfg.lora_rank
+    xr = lora_linear(x, params["w_in_x"], (lora or {}).get("w_in_x"), scale)
+    xg = lora_linear(x, params["w_in_g"], (lora or {}).get("w_in_g"), scale)
+    xr, _ = _causal_conv(xr, params["conv_w"], params["conv_b"])
+    a, u = _rglru_gates(params, xr)
+    h = rglru_scan(a, u).astype(x.dtype)
+    merged = h * jax.nn.gelu(xg)
+    out = lora_linear(merged, params["w_out"], (lora or {}).get("w_out"), scale)
+    return shard_act(out)
+
+
+def init_rglru_state(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> dict:
+    w = cfg.rglru_width or cfg.d_model
+    return {
+        "h": zeros(batch, w, dtype=jnp.float32),
+        "conv": zeros(batch, cfg.conv1d_width - 1, w, dtype=dtype),
+    }
+
+
+def rglru_state_spec(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> dict:
+    w = cfg.rglru_width or cfg.d_model
+    f = jax.ShapeDtypeStruct
+    return {"h": f((batch, w), jnp.float32),
+            "conv": f((batch, cfg.conv1d_width - 1, w), dtype)}
+
+
+def rglru_decode(params: dict, cfg: ModelConfig, x: jax.Array, state: dict,
+                 lora: dict | None = None):
+    """x: (B, 1, d); O(1) per-token state update."""
+    scale = cfg.lora_alpha / cfg.lora_rank
+    xr = lora_linear(x, params["w_in_x"], (lora or {}).get("w_in_x"), scale)
+    xg = lora_linear(x, params["w_in_g"], (lora or {}).get("w_in_g"), scale)
+    xr, conv_state = _causal_conv(xr, params["conv_w"], params["conv_b"],
+                                  state["conv"])
+    a, u = _rglru_gates(params, xr)          # (B, 1, w)
+    h = a[:, 0] * state["h"] + u[:, 0]       # (B, w)
+    merged = (h[:, None].astype(x.dtype)) * jax.nn.gelu(xg)
+    out = lora_linear(merged, params["w_out"], (lora or {}).get("w_out"), scale)
+    return shard_act(out), {"h": h, "conv": conv_state}

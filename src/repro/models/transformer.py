@@ -1,0 +1,448 @@
+"""Model assembly: pattern-scanned decoder, whisper enc-dec, VLM.
+
+Layers are given by ``cfg.pattern`` repeated ``cfg.n_groups`` times (params
+stacked with a leading group axis, iterated by lax.scan — keeps HLO size
+independent of depth) plus an explicit ``tail`` for patterns that do not
+divide n_layers (recurrentgemma 26 = 8*3 + 2, gemma3 26 = 4*6 + 2).
+
+The LoRA tree mirrors the params tree at the adapted weight leaves
+({"a": (d_in,r), "b": (r,d_out)}), optionally with a leading client axis for
+stacked federated evaluation (see repro.core.lora).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (ATTN, CROSS, DENSE, MLSTM, MOE, NONE, RGLRU,
+                                SLSTM, LayerSpec, ModelConfig)
+from repro.dist.sharding import logical
+from repro.models import attention as attn_mod
+from repro.models import moe as moe_mod
+from repro.models import rglru as rglru_mod
+from repro.models import xlstm as xlstm_mod
+from repro.models.common import embed_tokens, init_mlp, mlp, rmsnorm, unembed, zeros
+from repro.models.layers import shard_act
+
+
+# ===========================================================================
+# Init
+# ===========================================================================
+
+def _init_layer(key, cfg: ModelConfig, spec: LayerSpec, dtype,
+                encdec_cross: bool) -> dict:
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    p: dict = {"norm1": zeros(d, dtype=dtype)}
+    if spec.kind in (ATTN, CROSS):
+        p["attn"] = attn_mod.init_attn(ks[0], cfg, dtype)
+    elif spec.kind == RGLRU:
+        p["rglru"] = rglru_mod.init_rglru(ks[0], cfg, dtype)
+    elif spec.kind == MLSTM:
+        p["mlstm"] = xlstm_mod.init_mlstm(ks[0], cfg, dtype)
+    elif spec.kind == SLSTM:
+        p["slstm"] = xlstm_mod.init_slstm(ks[0], cfg, dtype)
+    if encdec_cross and spec.kind == ATTN:
+        p["norm_cross"] = zeros(d, dtype=dtype)
+        p["cross"] = attn_mod.init_attn(ks[1], cfg, dtype)
+    if spec.ffn == DENSE:
+        p["norm2"] = zeros(d, dtype=dtype)
+        p["ffn"] = init_mlp(ks[2], d, cfg.d_ff, dtype)
+    elif spec.ffn == MOE:
+        p["norm2"] = zeros(d, dtype=dtype)
+        p["moe"] = moe_mod.init_moe(ks[2], cfg, dtype)
+    return p
+
+
+def init_params(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    """Full parameter pytree for any assigned architecture."""
+    d = cfg.d_model
+    kE, kU, kG, kT, kenc = jax.random.split(key, 5)
+    params: dict = {
+        "embed": (jax.random.normal(kE, (cfg.vocab_padded, d)) *
+                  0.02).astype(dtype),
+        "final_norm": zeros(d, dtype=dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = (jax.random.normal(kU, (d, cfg.vocab_padded)) /
+                             math.sqrt(d)).astype(dtype)
+    encdec = cfg.family == "encdec"
+
+    # scanned groups: per pattern position, leaves stacked (n_groups, ...)
+    groups = []
+    for j, spec in enumerate(cfg.pattern):
+        per_group = [
+            _init_layer(jax.random.fold_in(kG, j * 1000 + g), cfg, spec,
+                        dtype, encdec)
+            for g in range(cfg.n_groups)
+        ]
+        groups.append(jax.tree.map(lambda *xs: jnp.stack(xs), *per_group)
+                      if cfg.n_groups > 1 else
+                      jax.tree.map(lambda x: x[None], per_group[0]))
+    params["groups"] = groups
+    params["tail"] = [
+        _init_layer(jax.random.fold_in(kT, j), cfg, spec, dtype, encdec)
+        for j, spec in enumerate(cfg.tail_pattern)
+    ]
+
+    if encdec:
+        enc_layers = [
+            _init_layer(jax.random.fold_in(kenc, j), cfg,
+                        LayerSpec(kind=ATTN, ffn=DENSE), dtype, False)
+            for j in range(cfg.enc_layers)
+        ]
+        params["encoder"] = {"layers": enc_layers,
+                             "norm": zeros(d, dtype=dtype)}
+    return params
+
+
+def param_specs(cfg: ModelConfig, dtype=jnp.float32):
+    """ShapeDtypeStruct tree of init_params without allocating (dry-run)."""
+    return jax.eval_shape(partial(init_params, cfg=cfg, dtype=dtype),
+                          jax.random.key(0))
+
+
+# ===========================================================================
+# Forward (train / prefill)
+# ===========================================================================
+
+def _apply_layer(p: dict, cfg: ModelConfig, spec: LayerSpec, x, *,
+                 memory, positions, lora: Optional[dict], encdec_cross: bool):
+    aux = jnp.zeros((), jnp.float32)
+    h = rmsnorm(x, p["norm1"], cfg.norm_eps)
+    # under sequence parallelism, re-materialize the full sequence ONCE per
+    # sublayer here (Megatron-SP all-gather point); otherwise each q-chunk
+    # slice gathers on its own (measured 937 GB/step on gemma3 — §Perf)
+    h = logical(h, "batch", *((None,) * (h.ndim - 1)))
+    lo = lora or {}
+    if spec.kind == ATTN:
+        y = attn_mod.attn_forward(p["attn"], cfg, h, window=spec.window,
+                                  causal=True, lora=lo.get("attn"),
+                                  positions=positions)
+    elif spec.kind == CROSS:
+        y = attn_mod.attn_forward(p["attn"], cfg, h, memory=memory,
+                                  lora=lo.get("attn"))
+    elif spec.kind == RGLRU:
+        y = rglru_mod.rglru_forward(p["rglru"], cfg, h, lora=lo.get("rglru"))
+    elif spec.kind == MLSTM:
+        y = xlstm_mod.mlstm_forward(p["mlstm"], cfg, h, lora=lo.get("mlstm"))
+    elif spec.kind == SLSTM:
+        y = xlstm_mod.slstm_forward(p["slstm"], cfg, h, lora=lo.get("slstm"))
+    else:
+        raise ValueError(spec.kind)
+    x = x + y.astype(x.dtype)
+    if encdec_cross and spec.kind == ATTN:
+        h = rmsnorm(x, p["norm_cross"], cfg.norm_eps)
+        y = attn_mod.attn_forward(p["cross"], cfg, h, memory=memory,
+                                  lora=lo.get("cross"))
+        x = x + y.astype(x.dtype)
+    if spec.ffn == DENSE:
+        h = rmsnorm(x, p["norm2"], cfg.norm_eps)
+        x = x + mlp(p["ffn"], h, cfg.act).astype(x.dtype)
+    elif spec.ffn == MOE:
+        h = rmsnorm(x, p["norm2"], cfg.norm_eps)
+        y, a = moe_mod.moe_ffn(p["moe"], cfg, h)
+        x = x + y.astype(x.dtype)
+        aux = aux + a
+    return x, aux
+
+
+def _encoder_forward(params: dict, cfg: ModelConfig, frontend: jax.Array,
+                     lora: Optional[dict]):
+    """Bidirectional encoder over stubbed frontend embeddings (whisper)."""
+    x = frontend
+    enc_lora = (lora or {}).get("encoder", {}) or {}
+    for j, p in enumerate(params["encoder"]["layers"]):
+        h = rmsnorm(x, p["norm1"], cfg.norm_eps)
+        lo = enc_lora.get("layers", [None] * 99)
+        lj = lo[j] if isinstance(lo, list) and j < len(lo) else None
+        x = x + attn_mod.attn_forward(p["attn"], cfg, h, causal=False,
+                                      lora=(lj or {}).get("attn"))
+        h = rmsnorm(x, p["norm2"], cfg.norm_eps)
+        x = x + mlp(p["ffn"], h, cfg.act)
+    return rmsnorm(x, params["encoder"]["norm"], cfg.norm_eps)
+
+
+def hidden_forward(params: dict, cfg: ModelConfig, tokens: jax.Array, *,
+                   frontend: Optional[jax.Array] = None,
+                   lora: Optional[dict] = None, remat: bool = True):
+    """Backbone only: returns (hidden (..., S, d) post-final-norm, aux)."""
+    x = embed_tokens(params["embed"], tokens) * math.sqrt(cfg.d_model)
+    x = shard_act(x, None)
+    S = tokens.shape[-1]
+    positions = jnp.arange(S)
+    encdec = cfg.family == "encdec"
+
+    memory = None
+    if encdec:
+        memory = _encoder_forward(params, cfg, frontend, lora)
+    elif cfg.family == "vlm":
+        memory = frontend
+
+    lo = lora or {}
+    lo_groups = lo.get("groups", [None] * len(cfg.pattern))
+    aux_total = jnp.zeros((), jnp.float32)
+
+    # --- scanned pattern groups ---
+    def group_body(carry, xs):
+        x, aux = carry
+        for j, spec in enumerate(cfg.pattern):
+            x, a = _apply_layer(xs[0][j], cfg, spec, x, memory=memory,
+                                positions=positions,
+                                lora=xs[1][j] if xs[1] is not None else None,
+                                encdec_cross=encdec)
+            aux = aux + a
+        return (x, aux), None
+
+    body = jax.checkpoint(group_body) if remat else group_body
+    has_lora = any(g is not None for g in lo_groups)
+    xs = (params["groups"], lo_groups if has_lora else None)
+    (x, aux_total), _ = jax.lax.scan(
+        body, (x, aux_total), xs,
+        length=cfg.n_groups)
+
+    # --- tail layers ---
+    lo_tail = lo.get("tail", [None] * cfg.tail_len)
+    for j, spec in enumerate(cfg.tail_pattern):
+        x, a = _apply_layer(params["tail"][j], cfg, spec, x, memory=memory,
+                            positions=positions, lora=lo_tail[j],
+                            encdec_cross=encdec)
+        aux_total = aux_total + a
+
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return x, aux_total
+
+
+def forward(params: dict, cfg: ModelConfig, tokens: jax.Array, *,
+            frontend: Optional[jax.Array] = None,
+            lora: Optional[dict] = None, remat: bool = True):
+    """Full forward: (logits (..., S, V_pad), aux). Materializes logits —
+    use lm_loss (chunked CE) for training at scale."""
+    x, aux = hidden_forward(params, cfg, tokens, frontend=frontend,
+                            lora=lora, remat=remat)
+    logits = unembed(x, params.get("unembed", params["embed"]),
+                     tied=cfg.tie_embeddings, softcap=cfg.logit_softcap)
+    return logits, aux
+
+
+# ===========================================================================
+# Loss — chunked fused cross-entropy
+# ===========================================================================
+
+_CE_CHUNK = 512
+
+
+def _chunk_ce(x_chunk, tgt_chunk, head, cfg: ModelConfig):
+    """x: (..., C, d), tgt: (..., C) -> summed CE over the chunk.
+    Never materializes more than (..., C, V) logits; f32 reduction."""
+    logits = unembed(x_chunk, head, tied=cfg.tie_embeddings,
+                     softcap=cfg.logit_softcap).astype(jnp.float32)
+    if cfg.vocab_padded != cfg.vocab_size:
+        pad_mask = jnp.arange(cfg.vocab_padded) < cfg.vocab_size
+        logits = jnp.where(pad_mask, logits, -1e30)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    # target term as a one-hot contraction: local on the vocab-sharded dim
+    # (take_along_axis backward scatter-adds across shards — §Perf iter 3)
+    onehot = jax.nn.one_hot(tgt_chunk, cfg.vocab_padded,
+                            dtype=logits.dtype)
+    tgt = jnp.einsum("...v,...v->...", logits, onehot)
+    return jnp.sum(lse - tgt)
+
+
+def lm_loss(params: dict, cfg: ModelConfig, tokens: jax.Array,
+            targets: jax.Array, *, frontend=None, lora=None,
+            remat: bool = True):
+    """Next-token CE over the *logical* vocab (padded ids masked out).
+
+    The unembed + softmax-CE is computed in sequence chunks under lax.scan
+    (rematerialized), so full-sequence logits over huge vocabs (gemma3:
+    262k) are never resident — the fix for the 210 GB/device dry-run bomb
+    (EXPERIMENTS.md §Perf notes)."""
+    x, aux = hidden_forward(params, cfg, tokens, frontend=frontend,
+                            lora=lora, remat=remat)
+    head = params.get("unembed", params["embed"])
+    S = x.shape[-2]
+    C = min(_CE_CHUNK, S)
+    n_tok = targets.size
+
+    if S % C != 0 or S <= C:
+        ce = _chunk_ce(x, targets, head, cfg) / n_tok
+        return ce + aux, (ce, aux)
+
+    nc = S // C
+    lead = x.shape[:-2]
+    xc = jnp.moveaxis(x.reshape(*lead, nc, C, x.shape[-1]), -3, 0)
+    tc = jnp.moveaxis(targets.reshape(*lead, nc, C), -2, 0)
+
+    @jax.checkpoint
+    def body(acc, inp):
+        xi, ti = inp
+        return acc + _chunk_ce(xi, ti, head, cfg), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (xc, tc))
+    ce = total / n_tok
+    return ce + aux, (ce, aux)
+
+
+# ===========================================================================
+# Decode (one token through the whole stack)
+# ===========================================================================
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.float32, *, specs_only: bool = False,
+               memory: Optional[jax.Array] = None, params=None) -> dict:
+    """Cache pytree. ``specs_only`` returns ShapeDtypeStructs (dry-run).
+    Cross-attention KV is precomputed at prefill; here it is allocated
+    (zeros / specs) with the right shape."""
+    kv, hd = cfg.n_kv_heads, cfg.hd
+    f = jax.ShapeDtypeStruct
+
+    def attn_cache(window):
+        if specs_only:
+            return attn_mod.cache_spec(cfg, batch, max_len, window, dtype)
+        return attn_mod.init_cache(cfg, batch, max_len, window, dtype)
+
+    def cross_cache():
+        M = cfg.n_frontend_tokens
+        if specs_only:
+            return {"ck": f((batch, M, kv, hd), dtype),
+                    "cv": f((batch, M, kv, hd), dtype)}
+        return {"ck": zeros(batch, M, kv, hd, dtype=dtype),
+                "cv": zeros(batch, M, kv, hd, dtype=dtype)}
+
+    def layer_cache(spec: LayerSpec) -> dict:
+        c: dict = {}
+        if spec.kind == ATTN:
+            c["kv"] = attn_cache(spec.window)
+            if cfg.family == "encdec":
+                c["cross"] = cross_cache()
+        elif spec.kind == CROSS:
+            c["cross"] = cross_cache()
+        elif spec.kind == RGLRU:
+            c["state"] = (rglru_mod.rglru_state_spec(cfg, batch, dtype)
+                          if specs_only else
+                          rglru_mod.init_rglru_state(cfg, batch, dtype))
+        elif spec.kind == MLSTM:
+            c["state"] = (xlstm_mod.mlstm_state_spec(cfg, batch, dtype)
+                          if specs_only else
+                          xlstm_mod.init_mlstm_state(cfg, batch, dtype))
+        elif spec.kind == SLSTM:
+            c["state"] = (xlstm_mod.slstm_state_spec(cfg, batch, dtype)
+                          if specs_only else
+                          xlstm_mod.init_slstm_state(cfg, batch, dtype))
+        return c
+
+    def stack_caches(spec: LayerSpec):
+        one = layer_cache(spec)
+        G = cfg.n_groups
+        if specs_only:
+            return jax.tree.map(
+                lambda s: f((G, *s.shape), s.dtype), one,
+                is_leaf=lambda s: isinstance(s, jax.ShapeDtypeStruct))
+        return jax.tree.map(lambda a: jnp.broadcast_to(a, (G, *a.shape)), one)
+
+    return {
+        "groups": [stack_caches(spec) for spec in cfg.pattern],
+        "tail": [layer_cache(spec) for spec in cfg.tail_pattern],
+    }
+
+
+def _decode_layer(p: dict, cfg: ModelConfig, spec: LayerSpec, x, cache, *,
+                  lora: Optional[dict], encdec_cross: bool):
+    lo = lora or {}
+    new_cache = dict(cache)
+    h = rmsnorm(x, p["norm1"], cfg.norm_eps)
+    if spec.kind == ATTN:
+        y, new_kv = attn_mod.attn_decode(p["attn"], cfg, h, cache["kv"],
+                                         window=spec.window,
+                                         lora=lo.get("attn"))
+        new_cache["kv"] = new_kv
+    elif spec.kind == CROSS:
+        y, _ = attn_mod.attn_decode(p["attn"], cfg, h, {},
+                                    cross_kv=(cache["cross"]["ck"],
+                                              cache["cross"]["cv"]),
+                                    lora=lo.get("attn"))
+    elif spec.kind == RGLRU:
+        y, st = rglru_mod.rglru_decode(p["rglru"], cfg, h, cache["state"],
+                                       lora=lo.get("rglru"))
+        new_cache["state"] = st
+    elif spec.kind == MLSTM:
+        y, st = xlstm_mod.mlstm_decode(p["mlstm"], cfg, h, cache["state"],
+                                       lora=lo.get("mlstm"))
+        new_cache["state"] = st
+    elif spec.kind == SLSTM:
+        y, st = xlstm_mod.slstm_decode(p["slstm"], cfg, h, cache["state"],
+                                       lora=lo.get("slstm"))
+        new_cache["state"] = st
+    else:
+        raise ValueError(spec.kind)
+    x = x + y.astype(x.dtype)
+    if encdec_cross and spec.kind == ATTN:
+        h = rmsnorm(x, p["norm_cross"], cfg.norm_eps)
+        y, _ = attn_mod.attn_decode(p["cross"], cfg, h, {},
+                                    cross_kv=(cache["cross"]["ck"],
+                                              cache["cross"]["cv"]),
+                                    lora=lo.get("cross"))
+        x = x + y.astype(x.dtype)
+    if spec.ffn == DENSE:
+        h = rmsnorm(x, p["norm2"], cfg.norm_eps)
+        x = x + mlp(p["ffn"], h, cfg.act).astype(x.dtype)
+    elif spec.ffn == MOE:
+        h = rmsnorm(x, p["norm2"], cfg.norm_eps)
+        y, _ = moe_mod.moe_ffn(p["moe"], cfg, h)
+        x = x + y.astype(x.dtype)
+    return x, new_cache
+
+
+def decode_step(params: dict, cfg: ModelConfig, tokens: jax.Array,
+                cache: dict, *, lora: Optional[dict] = None):
+    """tokens: (B, 1) -> (logits (B, 1, V_pad), new_cache)."""
+    x = embed_tokens(params["embed"], tokens) * math.sqrt(cfg.d_model)
+    encdec = cfg.family == "encdec"
+    lo = lora or {}
+    lo_groups = lo.get("groups", [None] * len(cfg.pattern))
+    has_lora = any(g is not None for g in lo_groups)
+
+    def body(x, xs):
+        gp, gc, gl = xs
+        new_gc = []
+        for j, spec in enumerate(cfg.pattern):
+            x, nc = _decode_layer(gp[j], cfg, spec, x, gc[j],
+                                  lora=gl[j] if gl is not None else None,
+                                  encdec_cross=encdec)
+            new_gc.append(nc)
+        return x, new_gc
+
+    xs = (params["groups"], cache["groups"],
+          lo_groups if has_lora else None)
+    x, new_group_caches = jax.lax.scan(body, x, xs, length=cfg.n_groups)
+
+    lo_tail = lo.get("tail", [None] * cfg.tail_len)
+    new_tail = []
+    for j, spec in enumerate(cfg.tail_pattern):
+        x, nc = _decode_layer(params["tail"][j], cfg, spec, x,
+                              cache["tail"][j], lora=lo_tail[j],
+                              encdec_cross=encdec)
+        new_tail.append(nc)
+
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = unembed(x, params.get("unembed", params["embed"]),
+                     tied=cfg.tie_embeddings, softcap=cfg.logit_softcap)
+    return logits, {"groups": new_group_caches, "tail": new_tail}
+
+
+def prefill(params: dict, cfg: ModelConfig, tokens: jax.Array, *,
+            frontend: Optional[jax.Array] = None,
+            lora: Optional[dict] = None):
+    """Forward over the prompt; returns last-position logits only (serving).
+    Unembeds ONLY the final hidden state — (B, S, V) logits are never
+    materialized. (Cache build from prefill activations is exercised in
+    serve.py at small scale; the 32k dry-run lowers this step.)"""
+    x, _ = hidden_forward(params, cfg, tokens, frontend=frontend, lora=lora,
+                          remat=False)
+    return unembed(x[..., -1, :], params.get("unembed", params["embed"]),
+                   tied=cfg.tie_embeddings, softcap=cfg.logit_softcap)

@@ -1,0 +1,317 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, chunkwise-parallel)
+and sLSTM (scalar memory, sequential recurrence with hidden mixing).
+
+TPU adaptation (DESIGN.md §3/§7): the mLSTM parallel form is *chunkwise* —
+quadratic only within chunks of length 256, with a stabilized (C, n, m)
+matrix-memory state carried across chunks by lax.scan. This preserves the
+O(S·C) compute/memory profile that makes xLSTM long_500k-capable, instead of
+the O(S²) fully-parallel form.
+
+Stabilized chunkwise mLSTM math (per head; f = sigmoid(f̃), i = exp(ĩ)):
+  lf[t]  = Σ_{s<=t} log f[s]    (within-chunk cumulative log forget)
+  m_loc[t] = max_{s<=t}(lf[t] - lf[s] + ĩ[s])
+  m[t]   = max(m_prev + lf[t], m_loc[t])        (running stabilizer)
+  intra  = Σ_s exp(lf[t]-lf[s]+ĩ[s]-m[t]) (qₜ·k_s/√dh) v_s
+  inter  = exp(m_prev + lf[t] - m[t]) qₜ·C_prev
+  n[t]   = matching normalizer; h[t] = (intra+inter)/max(|n[t]|, exp(-m[t]))
+  state update uses the chunk-final stabilizer.
+
+LoRA targets the q/k/v projections (paper recipe on any linear map).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import dense_init, zeros
+from repro.models.layers import lora_linear, shard_act
+from repro.models.rglru import _causal_conv
+
+_CHUNK = 256
+_NEG = -1e30
+
+
+# ===========================================================================
+# mLSTM
+# ===========================================================================
+
+def _mlstm_dims(cfg: ModelConfig):
+    inner = int(cfg.d_model * cfg.mlstm_proj_factor)
+    nh = cfg.n_heads
+    return inner, nh, inner // nh
+
+
+def init_mlstm(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    d = cfg.d_model
+    inner, nh, dh = _mlstm_dims(cfg)
+    ks = jax.random.split(key, 8)
+    return {
+        "w_up_x": dense_init(ks[0], d, inner, dtype),
+        "w_up_g": dense_init(ks[1], d, inner, dtype),
+        "conv_w": (jax.random.normal(ks[2], (cfg.conv1d_width, inner)) *
+                   0.1).astype(dtype),
+        "conv_b": zeros(inner, dtype=dtype),
+        "wq": dense_init(ks[3], inner, inner, dtype),
+        "wk": dense_init(ks[4], inner, inner, dtype),
+        "wv": dense_init(ks[5], inner, inner, dtype),
+        "w_igate": dense_init(ks[6], inner, nh, dtype),
+        "w_fgate": dense_init(ks[7], inner, nh, dtype),
+        "b_igate": zeros(nh, dtype=dtype),
+        # forget-gate bias init: strongly remember
+        "b_fgate": (jnp.ones(nh) * 3.0).astype(dtype),
+        "w_down": dense_init(jax.random.fold_in(key, 9), inner, d, dtype),
+    }
+
+
+def _mlstm_chunk(q, k, v, li, lfc, state):
+    """One chunk. q/k/v: (B, nh, C, dh) f32; li/lfc: (B, nh, C) log-i and
+    within-chunk cumulative log-f; state: (C_mat (B,nh,dh,dh), n (B,nh,dh),
+    m (B,nh)). Returns (h (B,nh,C,dh), new_state)."""
+    Bc = q.shape[2]
+    dh = q.shape[-1]
+    C_mat, n_vec, m_prev = state
+
+    # pairwise decay: D[t,s] = lfc[t] - lfc[s] + li[s]  (s <= t)
+    D = lfc[..., :, None] - lfc[..., None, :] + li[..., None, :]
+    tri = jnp.tril(jnp.ones((Bc, Bc), dtype=bool))
+    D = jnp.where(tri, D, _NEG)
+    m_loc = jnp.max(D, axis=-1)                                # (B,nh,C)
+    m_t = jnp.maximum(m_prev[..., None] + lfc, m_loc)          # (B,nh,C)
+
+    w_intra = jnp.exp(D - m_t[..., None])                      # (B,nh,C,C)
+    s_qk = jnp.einsum("bhtd,bhsd->bhts", q, k) / math.sqrt(dh)
+    intra = jnp.einsum("bhts,bhsd->bhtd", w_intra * s_qk, v)
+    n_intra = jnp.einsum("bhts,bhts->bht", w_intra, s_qk)
+
+    w_inter = jnp.exp(m_prev[..., None] + lfc - m_t)           # (B,nh,C)
+    inter = jnp.einsum("bhtd,bhde->bhte", q, C_mat) * w_inter[..., None]
+    n_inter = jnp.einsum("bhtd,bhd->bht", q, n_vec) * w_inter
+
+    n_tot = n_intra + n_inter
+    denom = jnp.maximum(jnp.abs(n_tot), jnp.exp(-m_t))
+    h = (intra + inter) / denom[..., None]
+
+    # ---- state update at chunk end (stabilizer m_last) ----
+    lf_last = lfc[..., -1]                                     # (B,nh)
+    m_last = m_t[..., -1]
+    # contribution of each s: exp(lf_last - lfc[s] + li[s] - m_last)
+    w_upd = jnp.exp(lf_last[..., None] - lfc + li - m_last[..., None])
+    C_new = (C_mat * jnp.exp(m_prev + lf_last - m_last)[..., None, None] +
+             jnp.einsum("bhs,bhsd,bhse->bhde", w_upd, k, v))
+    n_new = (n_vec * jnp.exp(m_prev + lf_last - m_last)[..., None] +
+             jnp.einsum("bhs,bhsd->bhd", w_upd, k))
+    return h, (C_new, n_new, m_last)
+
+
+def mlstm_forward(params: dict, cfg: ModelConfig, x: jax.Array,
+                  lora: dict | None = None):
+    """x: (..., S, d) -> (..., S, d)."""
+    scale = cfg.lora_alpha / cfg.lora_rank
+    inner, nh, dh = _mlstm_dims(cfg)
+    lead, S = x.shape[:-2], x.shape[-2]
+    B = math.prod(lead) if lead else 1
+
+    xu = lora_linear(x, params["w_up_x"], (lora or {}).get("w_up_x"), scale)
+    xg = lora_linear(x, params["w_up_g"], (lora or {}).get("w_up_g"), scale)
+    xc, _ = _causal_conv(xu, params["conv_w"], params["conv_b"])
+    xc = jax.nn.silu(xc)
+
+    q = lora_linear(xc, params["wq"], (lora or {}).get("wq"), scale)
+    k = lora_linear(xc, params["wk"], (lora or {}).get("wk"), scale)
+    v = lora_linear(xu, params["wv"], (lora or {}).get("wv"), scale)
+    ig = (xc @ params["w_igate"] + params["b_igate"]).astype(jnp.float32)
+    fg = (xc @ params["w_fgate"] + params["b_fgate"]).astype(jnp.float32)
+
+    def heads(z):
+        return jnp.moveaxis(z.reshape(B, S, nh, dh), 1, 2).astype(jnp.float32)
+
+    q, k, v = heads(q), heads(k), heads(v)
+    li = jnp.moveaxis(ig.reshape(B, S, nh), 1, 2)              # log i = ĩ
+    lf = jnp.moveaxis(jax.nn.log_sigmoid(fg).reshape(B, S, nh), 1, 2)
+
+    C = min(_CHUNK, S)
+    n_chunks = S // C
+    assert S % C == 0, (S, C)
+
+    q_c = jnp.moveaxis(q.reshape(B, nh, n_chunks, C, dh), 2, 0)
+    k_c = jnp.moveaxis(k.reshape(B, nh, n_chunks, C, dh), 2, 0)
+    v_c = jnp.moveaxis(v.reshape(B, nh, n_chunks, C, dh), 2, 0)
+    li_c = jnp.moveaxis(li.reshape(B, nh, n_chunks, C), 2, 0)
+    lf_c = jnp.moveaxis(lf.reshape(B, nh, n_chunks, C), 2, 0)
+
+    state0 = (jnp.zeros((B, nh, dh, dh), jnp.float32),
+              jnp.zeros((B, nh, dh), jnp.float32),
+              jnp.full((B, nh), 0.0, jnp.float32))
+
+    @jax.checkpoint
+    def body(state, inp):
+        qc, kc, vc, lic, lfcc = inp
+        lfc_cum = jnp.cumsum(lfcc, axis=-1)
+        h, new_state = _mlstm_chunk(qc, kc, vc, lic, lfc_cum, state)
+        return new_state, h
+
+    _, hs = jax.lax.scan(body, state0, (q_c, k_c, v_c, li_c, lf_c))
+    # hs: (n_chunks, B, nh, C, dh) -> (B, S, inner)
+    h = jnp.moveaxis(hs, 0, 2).reshape(B, nh, S, dh)
+    h = jnp.moveaxis(h, 1, 2).reshape(*lead, S, inner).astype(x.dtype)
+
+    out = h * jax.nn.silu(xg)
+    out = lora_linear(out, params["w_down"], (lora or {}).get("w_down"), scale)
+    return shard_act(out)
+
+
+def init_mlstm_state(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> dict:
+    inner, nh, dh = _mlstm_dims(cfg)
+    return {
+        "C": zeros(batch, nh, dh, dh, dtype=jnp.float32),
+        "n": zeros(batch, nh, dh, dtype=jnp.float32),
+        "m": zeros(batch, nh, dtype=jnp.float32),
+        "conv": zeros(batch, cfg.conv1d_width - 1, inner, dtype=dtype),
+    }
+
+
+def mlstm_state_spec(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> dict:
+    inner, nh, dh = _mlstm_dims(cfg)
+    f = jax.ShapeDtypeStruct
+    return {"C": f((batch, nh, dh, dh), jnp.float32),
+            "n": f((batch, nh, dh), jnp.float32),
+            "m": f((batch, nh), jnp.float32),
+            "conv": f((batch, cfg.conv1d_width - 1, inner), dtype)}
+
+
+def mlstm_decode(params: dict, cfg: ModelConfig, x: jax.Array, state: dict,
+                 lora: dict | None = None):
+    """x: (B, 1, d); O(1) recurrent update."""
+    scale = cfg.lora_alpha / cfg.lora_rank
+    inner, nh, dh = _mlstm_dims(cfg)
+    B = x.shape[0]
+    xu = lora_linear(x, params["w_up_x"], (lora or {}).get("w_up_x"), scale)
+    xg = lora_linear(x, params["w_up_g"], (lora or {}).get("w_up_g"), scale)
+    xc, conv_state = _causal_conv(xu, params["conv_w"], params["conv_b"],
+                                  state["conv"])
+    xc = jax.nn.silu(xc)
+    q = lora_linear(xc, params["wq"], (lora or {}).get("wq"), scale)
+    k = lora_linear(xc, params["wk"], (lora or {}).get("wk"), scale)
+    v = lora_linear(xu, params["wv"], (lora or {}).get("wv"), scale)
+    q = q.reshape(B, nh, dh).astype(jnp.float32)
+    k = k.reshape(B, nh, dh).astype(jnp.float32)
+    v = v.reshape(B, nh, dh).astype(jnp.float32)
+    li = (xc @ params["w_igate"] + params["b_igate"]) \
+        .reshape(B, nh).astype(jnp.float32)
+    lf = jax.nn.log_sigmoid(xc @ params["w_fgate"] + params["b_fgate"]) \
+        .reshape(B, nh).astype(jnp.float32)
+
+    m_new = jnp.maximum(lf + state["m"], li)
+    f_sc = jnp.exp(lf + state["m"] - m_new)
+    i_sc = jnp.exp(li - m_new)
+    C_new = (state["C"] * f_sc[..., None, None] +
+             i_sc[..., None, None] * k[..., :, None] * v[..., None, :])
+    n_new = state["n"] * f_sc[..., None] + i_sc[..., None] * k
+    num = jnp.einsum("bhd,bhde->bhe", q, C_new) / math.sqrt(dh)
+    den = jnp.abs(jnp.einsum("bhd,bhd->bh", q, n_new)) / math.sqrt(dh)
+    h = num / jnp.maximum(den, jnp.exp(-m_new))[..., None]
+    h = h.reshape(B, 1, inner).astype(x.dtype)
+    out = h * jax.nn.silu(xg)
+    out = lora_linear(out, params["w_down"], (lora or {}).get("w_down"), scale)
+    return shard_act(out), {"C": C_new, "n": n_new, "m": m_new,
+                            "conv": conv_state}
+
+
+# ===========================================================================
+# sLSTM
+# ===========================================================================
+
+def _slstm_dims(cfg: ModelConfig):
+    nh = cfg.n_heads
+    return nh, cfg.d_model // nh
+
+
+def init_slstm(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    d = cfg.d_model
+    nh, dh = _slstm_dims(cfg)
+    pf = cfg.slstm_proj_factor
+    up = int(d * pf)
+    ks = jax.random.split(key, 5)
+    return {
+        "w_gates": dense_init(ks[0], d, 4 * d, dtype),         # i f z o
+        "r_gates": (jax.random.normal(ks[1], (nh, dh, 4 * dh)) /
+                    math.sqrt(dh)).astype(dtype),              # block-diag R
+        "b_gates": jnp.concatenate(
+            [zeros(d), jnp.ones(d) * 3.0, zeros(2 * d)]).astype(dtype),
+        "w_ffn_gate": dense_init(ks[2], d, up, dtype),
+        "w_ffn_up": dense_init(ks[3], d, up, dtype),
+        "w_ffn_down": dense_init(ks[4], up, d, dtype),
+    }
+
+
+def _slstm_cell(params, x_t, state):
+    """x_t: (B, 4d) pre-computed Wx contribution; state: dict of (B,nh,dh)."""
+    c, n, h, m = state["c"], state["n"], state["h"], state["m"]
+    B, nh, dh = h.shape
+    rec = jnp.einsum("bhd,hdo->bho", h, params["r_gates"])     # (B,nh,4dh)
+    gates = x_t.reshape(B, nh, 4 * dh) + rec
+    it, ft, zt, ot = jnp.split(gates.astype(jnp.float32), 4, axis=-1)
+    lf = jax.nn.log_sigmoid(ft)
+    m_new = jnp.maximum(lf + m, it)
+    i_sc = jnp.exp(it - m_new)
+    f_sc = jnp.exp(lf + m - m_new)
+    c_new = f_sc * c + i_sc * jnp.tanh(zt)
+    n_new = f_sc * n + i_sc
+    h_new = jax.nn.sigmoid(ot) * c_new / jnp.maximum(n_new, 1.0)
+    return {"c": c_new, "n": n_new, "h": h_new, "m": m_new}
+
+
+def slstm_forward(params: dict, cfg: ModelConfig, x: jax.Array,
+                  lora: dict | None = None):
+    """x: (..., S, d); sequential lax.scan over time (sLSTM is inherently
+    recurrent — hidden-state mixing forbids a parallel form)."""
+    scale = cfg.lora_alpha / cfg.lora_rank
+    nh, dh = _slstm_dims(cfg)
+    lead, S, d = x.shape[:-2], x.shape[-2], x.shape[-1]
+    B = math.prod(lead) if lead else 1
+
+    wx = lora_linear(x, params["w_gates"], (lora or {}).get("w_gates"),
+                     scale, params["b_gates"])                 # (...,S,4d)
+    wx = wx.reshape(B, S, 4 * d)
+    state0 = {k: jnp.zeros((B, nh, dh), jnp.float32) for k in "cnh"}
+    state0["m"] = jnp.zeros((B, nh, dh), jnp.float32)
+
+    def body(state, x_t):
+        new = _slstm_cell(params, x_t, state)
+        return new, new["h"]
+
+    _, hs = jax.lax.scan(body, state0, jnp.moveaxis(wx, 0, 1))
+    h = jnp.moveaxis(hs, 0, 1).reshape(*lead, S, d).astype(x.dtype)
+
+    # post-cell gated FFN (proj factor 4/3)
+    g = jax.nn.silu(h @ params["w_ffn_gate"]) * (h @ params["w_ffn_up"])
+    out = g @ params["w_ffn_down"]
+    return shard_act(out)
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> dict:
+    nh, dh = _slstm_dims(cfg)
+    s = {k: zeros(batch, nh, dh, dtype=jnp.float32) for k in "cnhm"}
+    return s
+
+
+def slstm_state_spec(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> dict:
+    nh, dh = _slstm_dims(cfg)
+    f = jax.ShapeDtypeStruct
+    return {k: f((batch, nh, dh), jnp.float32) for k in "cnhm"}
+
+
+def slstm_decode(params: dict, cfg: ModelConfig, x: jax.Array, state: dict,
+                 lora: dict | None = None):
+    scale = cfg.lora_alpha / cfg.lora_rank
+    B, _, d = x.shape
+    wx = lora_linear(x, params["w_gates"], (lora or {}).get("w_gates"),
+                     scale, params["b_gates"])[:, 0]           # (B, 4d)
+    new = _slstm_cell(params, wx, state)
+    h = new["h"].reshape(B, 1, d).astype(x.dtype)
+    g = jax.nn.silu(h @ params["w_ffn_gate"]) * (h @ params["w_ffn_up"])
+    out = g @ params["w_ffn_down"]
+    return shard_act(out), new

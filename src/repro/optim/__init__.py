@@ -1,0 +1,5 @@
+from repro.optim.adamw import AdamW, AdamWState
+from repro.optim.schedules import constant, cosine_decay, linear_warmup_cosine
+
+__all__ = ["AdamW", "AdamWState", "constant", "cosine_decay",
+           "linear_warmup_cosine"]

@@ -1,0 +1,82 @@
+"""AdamW in pure JAX (no optax in this environment).
+
+Matches the paper's optimizer (AdamW, HuggingFace defaults:
+b1=0.9, b2=0.999, eps=1e-8, weight_decay=0.01). Works on any pytree; the
+update is elementwise so client-stacked LoRA trees are per-client AdamW
+automatically (each client's moments live in its slice).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: object
+    nu: object
+
+
+@dataclass(frozen=True)
+class AdamW:
+    lr: float = 1e-3
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+
+    def init(self, params) -> AdamWState:
+        z = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+        return AdamWState(step=jnp.zeros((), jnp.int32),
+                          mu=jax.tree.map(z, params),
+                          nu=jax.tree.map(z, params))
+
+    def update(self, grads, state: AdamWState, params,
+               lr_scale: jax.Array | float = 1.0,
+               update_mask=None):
+        """Returns (new_params, new_state). ``update_mask`` — pytree or
+        callable(path)->scalar gating updates per leaf (alternating LoRA:
+        frozen block gets mask 0 and keeps params AND moments)."""
+        step = state.step + 1
+        b1, b2 = self.b1, self.b2
+        bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def leaf_update(path, p, g, mu, nu, mask):
+            g32 = g.astype(jnp.float32)
+            mu_n = b1 * mu + (1 - b1) * g32
+            nu_n = b2 * nu + (1 - b2) * jnp.square(g32)
+            mu_hat = mu_n / bc1
+            nu_hat = nu_n / bc2
+            upd = mu_hat / (jnp.sqrt(nu_hat) + self.eps)
+            upd = upd + self.weight_decay * p.astype(jnp.float32)
+            new_p = p.astype(jnp.float32) - self.lr * lr_scale * mask * upd
+            # masked leaves keep original moments too
+            mu_out = mask * mu_n + (1 - mask) * mu
+            nu_out = mask * nu_n + (1 - mask) * nu
+            return new_p.astype(p.dtype), mu_out, nu_out
+
+        if update_mask is None:
+            masks = jax.tree.map(lambda _: 1.0, params)
+        elif callable(update_mask):
+            masks = jax.tree_util.tree_map_with_path(
+                lambda path, _: update_mask(path), params)
+        else:
+            masks = update_mask
+
+        flat = jax.tree_util.tree_flatten_with_path(params)
+        paths = [p for p, _ in flat[0]]
+        ps = [l for _, l in flat[0]]
+        gs = jax.tree.leaves(grads)
+        mus = jax.tree.leaves(state.mu)
+        nus = jax.tree.leaves(state.nu)
+        ms = jax.tree.leaves(masks)
+        outs = [leaf_update(pa, p, g, mu, nu, mk)
+                for pa, p, g, mu, nu, mk in zip(paths, ps, gs, mus, nus, ms)]
+        treedef = flat[1]
+        unf = lambda i: jax.tree_util.tree_unflatten(
+            treedef, [o[i] for o in outs])
+        return unf(0), AdamWState(step=step, mu=unf(1), nu=unf(2))

@@ -1,0 +1,23 @@
+"""Learning-rate schedules (pure functions step -> scale factor)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(step):
+    return jnp.ones_like(jnp.asarray(step, jnp.float32))
+
+
+def cosine_decay(step, total_steps: int, final_frac: float = 0.1):
+    s = jnp.asarray(step, jnp.float32)
+    frac = jnp.clip(s / max(total_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+    return final_frac + (1.0 - final_frac) * cos
+
+
+def linear_warmup_cosine(step, warmup: int, total_steps: int,
+                         final_frac: float = 0.1):
+    s = jnp.asarray(step, jnp.float32)
+    w = jnp.clip(s / max(warmup, 1), 0.0, 1.0)
+    return w * cosine_decay(jnp.maximum(s - warmup, 0),
+                            max(total_steps - warmup, 1), final_frac)

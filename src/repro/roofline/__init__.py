@@ -1,0 +1,5 @@
+from repro.roofline.analysis import (HW, collective_bytes_from_hlo,
+                                     jaxpr_cost, model_flops, roofline_report)
+
+__all__ = ["HW", "collective_bytes_from_hlo", "jaxpr_cost", "model_flops",
+           "roofline_report"]

@@ -1,0 +1,136 @@
+"""Collective attribution: WHERE do the bytes go?
+
+Turns a partitioned HLO module into a ranked table of
+(collective type, op_name, shape) -> trip-count-multiplied bytes.
+This is the tool that found every §Perf lever in EXPERIMENTS.md: sharding
+bugs show up as absurd entries (full-batch gathers, f32 score all-reduces)
+long before any hardware run would.
+
+Usage:
+    lowered = jax.jit(step).lower(*specs)
+    rows = attribute_collectives(lowered.compile().as_text())
+    print(format_table(rows))
+"""
+from __future__ import annotations
+
+import collections
+import re
+from dataclasses import dataclass
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "s32": 4, "s16": 2,
+    "s8": 1, "u64": 8, "u32": 4, "u16": 2, "u8": 1, "pred": 1,
+}
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_TRIP_RE = re.compile(r"known_trip_count[^0-9]*(\d+)")
+_BODY_RE = re.compile(r"body=(%?[\w\.\-]+)")
+_OPNAME_RE = re.compile(r'op_name="([^"]+)"')
+
+
+@dataclass
+class CollectiveRow:
+    kind: str
+    op_name: str
+    shape: str
+    bytes_total: float      # trip-multiplied, per device
+    occurrences: int
+
+
+def _shape_bytes(s: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(s):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _split_computations(hlo: str) -> dict[str, list[str]]:
+    comps: dict[str, list[str]] = {}
+    cur = None
+    for line in hlo.splitlines():
+        s = line.strip()
+        if s.endswith("{") and ("->" in s or s.startswith("ENTRY")):
+            name = s.split(" ")[0].lstrip("%")
+            if name == "ENTRY":
+                name = s.split(" ")[1].lstrip("%")
+            cur = name
+            comps[cur] = []
+        elif s == "}":
+            cur = None
+        elif cur is not None:
+            comps[cur].append(s)
+    return comps
+
+
+def attribute_collectives(hlo_text: str, top: int = 20) -> list[CollectiveRow]:
+    comps = _split_computations(hlo_text)
+
+    # while-edge graph -> per-computation execution multiplier
+    edges = collections.defaultdict(list)
+    for name, lines in comps.items():
+        for ln in lines:
+            if " while(" in ln:
+                mb = _BODY_RE.search(ln)
+                mt = _TRIP_RE.search(ln)
+                if mb:
+                    edges[name].append((mb.group(1).lstrip("%"),
+                                        int(mt.group(1)) if mt else 1))
+    entry = None
+    for line in hlo_text.splitlines():
+        if line.startswith("ENTRY"):
+            entry = line.split(" ")[1].lstrip("%")
+            break
+    mult: dict[str, int] = collections.defaultdict(int)
+
+    def walk(name, m, depth=0):
+        if depth > 40:
+            return
+        mult[name] += m
+        for child, trip in edges.get(name, []):
+            walk(child, m * trip, depth + 1)
+
+    if entry:
+        walk(entry, 1)
+
+    agg: dict[tuple, list] = {}
+    for name, lines in comps.items():
+        m = mult.get(name, 0)
+        if not m:
+            continue
+        for ln in lines:
+            for kind in _COLLECTIVES:
+                if f" {kind}(" in ln:
+                    lhs = ln.split(f"{kind}(")[0]
+                    b = _shape_bytes(lhs) * m
+                    mo = _OPNAME_RE.search(ln)
+                    op = re.sub(r"\s*stack_frame_id.*", "",
+                                mo.group(1)) if mo else "?"
+                    sh = _SHAPE_RE.search(lhs)
+                    key = (kind, op[-100:], sh.group(0) if sh else "?")
+                    if key not in agg:
+                        agg[key] = [0.0, 0]
+                    agg[key][0] += b
+                    agg[key][1] += m
+                    break
+
+    rows = [CollectiveRow(kind=k, op_name=o, shape=s, bytes_total=v[0],
+                          occurrences=v[1])
+            for (k, o, s), v in agg.items()]
+    rows.sort(key=lambda r: -r.bytes_total)
+    return rows[:top]
+
+
+def format_table(rows: list[CollectiveRow]) -> str:
+    out = [f"{'GB':>9} {'x':>6} {'kind':<18} {'shape':<26} op_name (tail)"]
+    for r in rows:
+        out.append(f"{r.bytes_total/1e9:9.2f} {r.occurrences:>6} "
+                   f"{r.kind:<18} {r.shape:<26} …{r.op_name[-70:]}")
+    return "\n".join(out)

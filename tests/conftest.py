@@ -1,0 +1,10 @@
+"""Shared fixtures. NOTE: no device-count override here by design — smoke
+tests and benches must see the real single CPU device (task spec); only
+launch/dryrun.py forces 512 host devices."""
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.key(0)

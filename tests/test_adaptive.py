@@ -1,0 +1,69 @@
+"""Adaptive-T controller (beyond-paper, §VII future work) tests."""
+import numpy as np
+import pytest
+
+from repro.core.adaptive import AdaptiveTController, adaptive_round_masks
+from repro.core.topology import make_topology
+
+
+def test_spectral_estimator_tracks_rho():
+    topo = make_topology("complete", 10, p=0.1, seed=0)
+    true_rho = topo.rho_estimate(150)
+    ctrl = AdaptiveTController(ewma=0.1)
+    for _ in range(200):
+        ctrl.observe_mixing_matrix(topo.sample())
+    assert abs(np.sqrt(ctrl.rho_sq) - true_rho) < 0.05
+
+
+def test_T_monotone_in_connectivity():
+    ts = []
+    for p in (0.8, 0.2, 0.05):
+        topo = make_topology("complete", 10, p=p, seed=1)
+        ctrl = AdaptiveTController(c=0.5, ewma=0.1)
+        for _ in range(120):
+            ctrl.observe_mixing_matrix(topo.sample())
+        ts.append(ctrl.target_T())
+    assert ts == sorted(ts), ts
+
+
+def test_T_changes_only_at_phase_boundaries():
+    ctrl = AdaptiveTController(c=1.0, t_max=8)
+    ctrl.rho_sq = 0.99  # wants large T
+    phases = []
+    for _ in range(20):
+        is_a, T = ctrl.step()
+        phases.append((is_a, T))
+    # T is constant within each contiguous phase
+    runs = []
+    cur = None
+    for is_a, T in phases:
+        if cur is None or is_a != cur[0]:
+            runs.append((is_a, T, 1))
+            cur = (is_a, T)
+        else:
+            assert T == runs[-1][1]   # unchanged mid-phase
+            runs[-1] = (runs[-1][0], T, runs[-1][2] + 1)
+    assert len(runs) >= 2
+
+
+def test_frozen_contraction_probe():
+    ctrl = AdaptiveTController(ewma=0.3)
+    # simulate contraction ratio 0.25 => rho ~ 0.5
+    d = 1.0
+    for _ in range(60):
+        ctrl.observe_frozen_contraction(d, 0.25 * d)
+        d *= 0.25
+        if d < 1e-10:
+            d = 1.0
+    assert abs(np.sqrt(ctrl.rho_sq) - 0.5) < 0.1
+
+
+def test_adaptive_masks_alternate():
+    ctrl = AdaptiveTController()
+    ctrl.rho_sq = 0.0  # T stays 1
+    m1 = adaptive_round_masks(ctrl, "tad")
+    m2 = adaptive_round_masks(ctrl, "tad")
+    assert m1.update_a != m2.update_a
+    assert m1.mix_a == m1.mix_b == 1.0  # joint mixing preserved
+    with pytest.raises(ValueError):
+        adaptive_round_masks(ctrl, "ffa")

@@ -1,0 +1,113 @@
+"""Pallas kernel validation: shape/dtype sweeps, interpret=True vs ref.py
+oracle (task-mandated per-kernel allclose)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.gossip_mix import gossip_mix
+from repro.kernels.lora_matmul import lora_matmul
+from repro.kernels.rglru_scan import rglru_scan
+
+TOLS = {jnp.float32: 2e-4, jnp.bfloat16: 2e-2}
+
+
+def _tol(dt):
+    return TOLS[jnp.bfloat16 if dt == jnp.bfloat16 else jnp.float32]
+
+
+@pytest.mark.parametrize("M,K,N,r", [(128, 128, 128, 8), (256, 384, 512, 16),
+                                     (128, 256, 128, 4), (512, 128, 256, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_lora_matmul(M, K, N, r, dtype, key):
+    ks = jax.random.split(key, 4)
+    x = jax.random.normal(ks[0], (M, K), dtype)
+    w = jax.random.normal(ks[1], (K, N), dtype)
+    a = (jax.random.normal(ks[2], (K, r)) * 0.1).astype(dtype)
+    b = (jax.random.normal(ks[3], (r, N)) * 0.1).astype(dtype)
+    y = lora_matmul(x, w, a, b, scale=2.0, interpret=True)
+    yr = ref.lora_matmul_ref(x, w, a, b, 2.0)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(yr, np.float32),
+                               rtol=_tol(dtype), atol=K * _tol(dtype) * 0.05)
+
+
+@pytest.mark.parametrize("S,L,window,causal", [
+    (128, 128, None, True), (256, 256, 64, True), (128, 128, None, False),
+    (256, 256, 200, True),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention(S, L, window, causal, dtype, key):
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (2, 3, S, 64), dtype)
+    k = jax.random.normal(ks[1], (2, 3, L, 64), dtype)
+    v = jax.random.normal(ks[2], (2, 3, L, 64), dtype)
+    y = flash_attention(q, k, v, causal=causal, window=window, bq=64, bk=64,
+                        interpret=True)
+    yr = ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(yr, np.float32),
+                               rtol=_tol(dtype), atol=_tol(dtype) * 10)
+
+
+@pytest.mark.parametrize("m,P", [(10, 512), (16, 2048), (4, 1024)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gossip_mix(m, P, dtype, key):
+    rng = np.random.default_rng(0)
+    # random doubly-stochastic (symmetrized sinkhorn-ish)
+    W = rng.random((m, m))
+    for _ in range(50):
+        W /= W.sum(1, keepdims=True)
+        W /= W.sum(0, keepdims=True)
+    W = jnp.asarray(W, jnp.float32)
+    x = jax.random.normal(key, (m, P), dtype)
+    y = gossip_mix(W, x, interpret=True)
+    yr = ref.gossip_mix_ref(W, x)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(yr, np.float32),
+                               rtol=_tol(dtype), atol=_tol(dtype))
+
+
+@pytest.mark.parametrize("B,T,W", [(2, 256, 64), (1, 512, 96), (3, 128, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rglru_scan(B, T, W, dtype, key):
+    ks = jax.random.split(key, 2)
+    a = jax.nn.sigmoid(jax.random.normal(ks[0], (B, T, W))).astype(dtype)
+    u = (jax.random.normal(ks[1], (B, T, W)) * 0.1).astype(dtype)
+    y = rglru_scan(a, u, bt=64, interpret=True)
+    yr = ref.rglru_scan_ref(a, u)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(yr, np.float32),
+                               rtol=5e-2 if dtype == jnp.bfloat16 else 1e-4,
+                               atol=5e-2 if dtype == jnp.bfloat16 else 1e-4)
+
+
+def test_ops_dispatch_cpu_fallback(key):
+    """ops.* must route to the jnp reference on CPU and stay correct."""
+    from repro.kernels import ops
+    x = jax.random.normal(key, (64, 64))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (64, 64))
+    a = jax.random.normal(jax.random.fold_in(key, 2), (64, 8)) * 0.1
+    b = jax.random.normal(jax.random.fold_in(key, 3), (8, 64)) * 0.1
+    assert jax.default_backend() == "cpu"
+    y = ops.lora_matmul(x, w, a, b, 2.0)
+    np.testing.assert_allclose(np.asarray(y),
+                               np.asarray(ref.lora_matmul_ref(x, w, a, b, 2.0)))
+    ops.set_backend("pallas_interpret")
+    try:
+        y2 = ops.lora_matmul(x, w, a, b, 2.0)
+        np.testing.assert_allclose(np.asarray(y2), np.asarray(y), rtol=1e-4,
+                                   atol=1e-4)
+    finally:
+        ops.set_backend(None)
+
+
+def test_gossip_mix_flat_identity_mask(key):
+    """mask=0 -> identity regardless of W (frozen-block no-mix)."""
+    from repro.kernels import ops
+    W = jnp.zeros((6, 6)) + 1.0 / 6
+    x = jax.random.normal(key, (6, 100))
+    y = ops.gossip_mix_flat(W, x, mask=0.0)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x), rtol=1e-6)

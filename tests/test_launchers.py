@@ -1,0 +1,52 @@
+"""CLI driver smoke tests: train.py / serve.py / examples run end-to-end on
+CPU (reduced configs, few rounds)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+ENV = {**os.environ, "PYTHONPATH": os.path.join(ROOT, "src")}
+
+
+def _run(args, timeout=600):
+    return subprocess.run([sys.executable] + args, cwd=ROOT, env=ENV,
+                          capture_output=True, text=True, timeout=timeout)
+
+
+def test_train_cli(tmp_path):
+    log = os.path.join(tmp_path, "log.json")
+    r = _run(["-m", "repro.launch.train", "--arch", "gemma3-1b",
+              "--method", "tad", "--rounds", "3", "--local-steps", "1",
+              "--clients", "4", "--batch", "2", "--seq", "32",
+              "--log", log])
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "T=" in r.stdout and os.path.exists(log)
+
+
+def test_train_cli_tstar_selection():
+    r = _run(["-m", "repro.launch.train", "--arch", "xlstm-1.3b",
+              "--method", "rolora", "--rounds", "2", "--local-steps", "1",
+              "--clients", "4", "--batch", "2", "--seq", "16", "--p", "0.05"])
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "T*-selected" in r.stdout
+
+
+def test_serve_cli():
+    r = _run(["-m", "repro.launch.serve", "--arch", "deepseek-moe-16b",
+              "--batch", "2", "--prompt-len", "8", "--gen", "4"])
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "decoded" in r.stdout
+
+
+def test_quickstart_example():
+    r = _run(["examples/quickstart.py"])
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "T*=" in r.stdout and "done" in r.stdout
+
+
+def test_dfl_finetune_example_small():
+    r = _run(["examples/dfl_finetune.py", "--small"])
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "perplexity after merge" in r.stdout

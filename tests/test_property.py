@@ -1,0 +1,116 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import mix_tree, mix_tree_concat, sample_mixing_matrix
+from repro.core.diagnostics import consensus_stats
+from repro.core.topology import (complete_graph, lambda2, make_topology,
+                                 ring_graph)
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@given(m=st.integers(3, 12), p=st.floats(0.05, 1.0), seed=st.integers(0, 99))
+@settings(**SETTINGS)
+def test_mixing_matrix_doubly_stochastic(m, p, seed):
+    """Lemma A.10: edge-activation pairwise averaging gives doubly-stochastic
+    W_t for every sample."""
+    rng = np.random.default_rng(seed)
+    W = sample_mixing_matrix(complete_graph(m), p, rng)
+    np.testing.assert_allclose(W.sum(0), 1.0, atol=1e-9)
+    np.testing.assert_allclose(W.sum(1), 1.0, atol=1e-9)
+    assert (W >= -1e-12).all()
+
+
+@given(m=st.integers(3, 10), p=st.floats(0.05, 1.0), seed=st.integers(0, 99))
+@settings(**SETTINGS)
+def test_gossip_preserves_mean(m, p, seed):
+    """Doubly-stochastic mixing preserves the client average of every leaf
+    (the conserved quantity behind the paper's consensus analysis)."""
+    rng = np.random.default_rng(seed)
+    W = jnp.asarray(sample_mixing_matrix(complete_graph(m), p, rng))
+    x = jnp.asarray(rng.normal(size=(m, 4, 3)))
+    tree = {"mod": {"a": x, "b": jnp.asarray(rng.normal(size=(m, 3, 5)))}}
+    mixed = mix_tree(W, tree, 1.0, 1.0)
+    for k in ("a", "b"):
+        np.testing.assert_allclose(
+            np.asarray(jnp.mean(mixed["mod"][k], 0)),
+            np.asarray(jnp.mean(tree["mod"][k], 0)), atol=1e-6)
+
+
+@given(m=st.integers(3, 8), seed=st.integers(0, 50))
+@settings(**SETTINGS)
+def test_mix_concat_equals_per_leaf(m, seed):
+    """The fused single-buffer mixing lowering is numerically identical to
+    per-leaf mixing."""
+    rng = np.random.default_rng(seed)
+    W = jnp.asarray(sample_mixing_matrix(complete_graph(m), 0.5, rng),
+                    jnp.float32)
+    tree = {"x": {"a": jnp.asarray(rng.normal(size=(m, 6, 2)), jnp.float32),
+                  "b": jnp.asarray(rng.normal(size=(m, 2, 7)), jnp.float32)},
+            "y": {"a": jnp.asarray(rng.normal(size=(3, m, 4, 2)),
+                                   jnp.float32),
+                  "b": jnp.asarray(rng.normal(size=(3, m, 2, 4)),
+                                   jnp.float32)}}
+    m1 = mix_tree(W, tree, 1.0, 0.3)
+    m2 = mix_tree_concat(W, tree, 1.0, 0.3)
+    for l1, l2 in zip(jax.tree.leaves(m1), jax.tree.leaves(m2)):
+        np.testing.assert_allclose(np.asarray(l1), np.asarray(l2),
+                                   rtol=1e-5, atol=1e-5)
+
+
+@given(m=st.integers(3, 8), seed=st.integers(0, 50))
+@settings(**SETTINGS)
+def test_cross_term_cauchy_schwarz(m, seed):
+    """Appendix A-D: ||C|| <= ||Δ_A||·||Δ_B|| for any client states."""
+    rng = np.random.default_rng(seed)
+    tree = {"mod": {"a": jnp.asarray(rng.normal(size=(m, 8, 3))),
+                    "b": jnp.asarray(rng.normal(size=(m, 3, 8)))}}
+    s = consensus_stats(tree)
+    assert float(s["cross_norm"]) <= float(s["cs_bound"]) + 1e-6
+
+
+@given(m=st.integers(4, 12))
+@settings(**SETTINGS)
+def test_ring_worse_connected_than_complete(m):
+    """λ2(ring) < λ2(complete) — the spectral ordering the paper's Table V
+    stress test relies on."""
+    assert lambda2(ring_graph(m)) < lambda2(complete_graph(m))
+
+
+@given(seed=st.integers(0, 20))
+@settings(max_examples=10, deadline=None)
+def test_rho_decreases_with_p(seed):
+    """Higher activation probability -> smaller ρ (Lemma A.10 scaling)."""
+    t_lo = make_topology("complete", 8, p=0.05, seed=seed)
+    t_hi = make_topology("complete", 8, p=0.8, seed=seed)
+    assert t_hi.rho_estimate(60) < t_lo.rho_estimate(60)
+
+
+@given(m=st.integers(2, 6), seed=st.integers(0, 30))
+@settings(**SETTINGS)
+def test_lora_merge_equals_adapter_forward(m, seed):
+    """merge_lora(base, lora) forward == base forward with LoRA adapters
+    (classifier substrate)."""
+    from repro.core import build_lora_tree, client_slice, merge_lora
+    from repro.models.classifier import (classifier_forward, encoder_config,
+                                         init_classifier)
+    cfg = encoder_config(n_layers=1, d_model=32, n_heads=2, d_ff=32,
+                         vocab_size=64)
+    key = jax.random.key(seed)
+    base = init_classifier(key, cfg, n_classes=2)
+    lora = build_lora_tree(jax.random.fold_in(key, 1), base, cfg,
+                           n_clients=m)
+    # give b random values (zero-init would make the test vacuous)
+    lora = jax.tree.map(
+        lambda x: x + 0.05 * jax.random.normal(jax.random.fold_in(
+            key, x.size % 97), x.shape), lora)
+    toks = jax.random.randint(key, (3, 8), 0, cfg.vocab_size)
+    li = client_slice(lora, 0)
+    merged = merge_lora(base, li, cfg)
+    y_adapter = classifier_forward(base, cfg, toks, lora=li)
+    y_merged = classifier_forward(merged, cfg, toks)
+    np.testing.assert_allclose(np.asarray(y_adapter), np.asarray(y_merged),
+                               rtol=2e-4, atol=2e-4)

@@ -1,0 +1,82 @@
+"""Roofline machinery unit tests: jaxpr walker scan-awareness, HLO
+collective parser, report assembly."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.roofline.analysis import (collective_bytes_from_hlo, jaxpr_cost,
+                                     model_flops, roofline_report)
+
+
+def test_jaxpr_cost_counts_scan_trips():
+    def f(x):
+        def body(c, _):
+            return c @ c, None
+        c, _ = jax.lax.scan(body, x, None, length=10)
+        return c
+
+    jxp = jax.make_jaxpr(f)(jax.ShapeDtypeStruct((128, 128), jnp.float32))
+    cost = jaxpr_cost(jxp)
+    expected = 10 * 2 * 128 ** 3
+    assert abs(cost["flops"] - expected) / expected < 0.05
+
+
+def test_jaxpr_cost_counts_grad_flops():
+    def loss(w, x):
+        return jnp.sum((x @ w) ** 2)
+
+    g = jax.grad(loss)
+    jxp = jax.make_jaxpr(g)(jax.ShapeDtypeStruct((64, 64), jnp.float32),
+                            jax.ShapeDtypeStruct((32, 64), jnp.float32))
+    fwd = jax.make_jaxpr(loss)(jax.ShapeDtypeStruct((64, 64), jnp.float32),
+                               jax.ShapeDtypeStruct((32, 64), jnp.float32))
+    assert jaxpr_cost(jxp)["flops"] > 1.8 * jaxpr_cost(fwd)["flops"]
+
+
+def test_collective_parser_trip_counts():
+    hlo = """
+HloModule test
+
+%body_comp (p: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+  %ag = f32[8,8]{1,0} all-gather(%x), dimensions={0}
+  ROOT %t = tuple(...)
+}
+
+%cond_comp (p: (s32[], f32[8,8])) -> pred[] {
+  ROOT %lt = pred[] compare(...)
+}
+
+ENTRY %main (a: f32[8,8]) -> f32[8,8] {
+  %ar = f32[4,4]{1,0} all-reduce(%a), to_apply=%sum
+  %w = (s32[], f32[8,8]) while(%init), condition=%cond_comp, body=%body_comp, backend_config={"known_trip_count":{"n":"7"}}
+  ROOT %r = f32[8,8] get-tuple-element(%w), index=1
+}
+"""
+    res = collective_bytes_from_hlo(hlo)
+    # all-reduce once: 4*4*4 = 64; all-gather 7x: 7*8*8*4 = 1792
+    assert res["by_type"]["all-reduce"] == 64.0
+    assert res["by_type"]["all-gather"] == 7 * 256.0
+    assert res["ops"] == 8
+
+
+def test_roofline_report_bottleneck():
+    rep = roofline_report(flops=1e15, hbm_bytes=1e12,
+                          coll_bytes_per_device=1e3, n_chips=256,
+                          model_fl=5e14)
+    assert rep["bottleneck"] == "compute"
+    assert 0 < rep["useful_compute_ratio"] <= 1.0
+    rep2 = roofline_report(flops=1e12, hbm_bytes=1e12,
+                           coll_bytes_per_device=1e12, n_chips=256,
+                           model_fl=1e12)
+    assert rep2["bottleneck"] == "collective"
+
+
+def test_model_flops_moe_uses_active():
+    from repro.configs import get_config
+    dense = get_config("granite-34b")
+    moe = get_config("mixtral-8x22b")
+    assert model_flops(moe, 100, training=True) < \
+        6 * moe.param_count() * 100
+    assert model_flops(dense, 100, training=True) == \
+        6 * dense.param_count() * 100

@@ -1,0 +1,119 @@
+"""Serving engine + attribution + MoE dispatch equivalence tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.launch.serving import ServeEngine
+from repro.models import transformer as tf
+
+
+@pytest.fixture(scope="module")
+def served():
+    cfg = get_config("gemma3-1b").reduced()
+    params = tf.init_params(jax.random.key(0), cfg)
+    return cfg, params
+
+
+def _reference_generate(params, cfg, prompt, max_new):
+    """Single-sequence greedy reference using a fresh cache."""
+    cache = tf.init_cache(cfg, 1, 64)
+    toks = list(prompt)
+    logits = None
+    for t in toks:
+        logits, cache = tf.decode_step(params, cfg,
+                                       jnp.asarray([[t]], jnp.int32), cache)
+    out = []
+    for _ in range(max_new):
+        nxt = int(jnp.argmax(logits[0, -1, :cfg.vocab_size]))
+        out.append(nxt)
+        logits, cache = tf.decode_step(params, cfg,
+                                       jnp.asarray([[nxt]], jnp.int32),
+                                       cache)
+    return out
+
+
+def test_engine_matches_single_sequence_reference(served):
+    cfg, params = served
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, size=n).astype(np.int32)
+               for n in (5, 3, 7)]
+    refs = [_reference_generate(params, cfg, p, 6) for p in prompts]
+
+    eng = ServeEngine(params, cfg, n_slots=2, max_len=64)
+    reqs = [eng.submit(p, max_new=6) for p in prompts]
+    # 3 requests on 2 slots forces continuous-batching turnover
+    done = {}
+    for _ in range(500):
+        eng.tick()
+        if not eng.queue and all(s.req is None for s in eng.slots):
+            break
+    # collect via the Request objects we submitted
+    # (engine mutates them in place)
+    # re-run to fetch: easier — engine stores reqs only in slots/queue;
+    # hold our own handles:
+    eng2 = ServeEngine(params, cfg, n_slots=2, max_len=64)
+    handles = []
+    for p in prompts:
+        import repro.launch.serving as S
+        r = S.Request(rid=len(handles), prompt=p, max_new=6)
+        eng2.queue.append(r)
+        handles.append(r)
+    eng2.run()
+    for r, ref in zip(handles, refs):
+        assert r.done
+        assert r.tokens_out == ref, (r.tokens_out, ref)
+
+
+def test_slot_reuse_isolated(served):
+    """A slot reused for a second request must give the same output as a
+    fresh engine (per-slot t reset + validity masking isolate requests)."""
+    cfg, params = served
+    rng = np.random.default_rng(1)
+    p1 = rng.integers(0, cfg.vocab_size, size=4).astype(np.int32)
+    p2 = rng.integers(0, cfg.vocab_size, size=4).astype(np.int32)
+
+    import repro.launch.serving as S
+    eng = ServeEngine(params, cfg, n_slots=1, max_len=64)
+    r1 = S.Request(rid=0, prompt=p1, max_new=4)
+    r2 = S.Request(rid=1, prompt=p2, max_new=4)
+    eng.queue.extend([r1, r2])
+    eng.run()
+    ref2 = _reference_generate(params, cfg, p2, 4)
+    assert r2.tokens_out == ref2
+
+
+def test_moe_dispatch_equivalence(key):
+    """dense and fused MoE dispatches are numerically identical."""
+    from repro.models import moe as moe_mod
+    cfg = get_config("deepseek-moe-16b").reduced()
+    params = moe_mod.init_moe(key, cfg)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (2, 8, cfg.d_model))
+    y1, a1 = moe_mod.moe_ffn(params, cfg, x, dispatch="dense")
+    y2, a2 = moe_mod.moe_ffn(params, cfg, x, dispatch="fused")
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=2e-5,
+                               atol=2e-5)
+    np.testing.assert_allclose(float(a1), float(a2), rtol=1e-6)
+
+
+def test_collective_attribution_parses():
+    from repro.roofline.attribution import attribute_collectives, format_table
+    hlo = """
+%body (p: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+  %ag = f32[8,8]{1,0} all-gather(%x), dimensions={0}, metadata={op_name="jit(f)/while/dot_general"}
+  ROOT %t = tuple(...)
+}
+
+ENTRY %main (a: f32[8,8]) -> f32[8,8] {
+  %ar = f32[4,4]{1,0} all-reduce(%a), metadata={op_name="jit(f)/loss"}
+  %w = (s32[], f32[8,8]) while(%init), condition=%c, body=%body, backend_config={"known_trip_count":{"n":"5"}}
+  ROOT %r = f32[8,8] get-tuple-element(%w), index=1
+}
+"""
+    rows = attribute_collectives(hlo)
+    assert rows[0].kind == "all-gather"
+    assert rows[0].bytes_total == 5 * 256.0
+    assert rows[0].occurrences == 5
+    assert "dot_general" in rows[0].op_name
+    assert "GB" in format_table(rows)

@@ -1,0 +1,139 @@
+"""Substrate unit tests: checkpointing, data pipeline, optimizer,
+sharding rules, topology-aware T* selector."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import load_pytree, save_pytree
+from repro.core.topology import (make_topology, optimal_switching_interval,
+                                 optimal_switching_interval_edge_activation)
+from repro.data import federated_batches, label_skew_partitions, make_task
+from repro.optim import AdamW
+
+
+def test_checkpoint_roundtrip(tmp_path, key):
+    tree = {
+        "groups": [{"attn": {"wq": jax.random.normal(key, (4, 8, 8))}},
+                   {"moe": {"w_gate": jnp.ones((2, 3, 4))}}],
+        "tail": [],
+        "scalar": jnp.float32(3.5),
+    }
+    path = os.path.join(tmp_path, "ckpt.npz")
+    save_pytree(path, tree)
+    loaded = load_pytree(path)
+    np.testing.assert_allclose(loaded["groups"][0]["attn"]["wq"],
+                               np.asarray(tree["groups"][0]["attn"]["wq"]))
+    np.testing.assert_allclose(loaded["scalar"], 3.5)
+    assert isinstance(loaded["groups"], list) and len(loaded["groups"]) == 2
+
+
+def test_label_skew_matches_paper():
+    b = label_skew_partitions(2, 10)
+    assert b.shape == (10, 2)
+    np.testing.assert_allclose(b.sum(1), 1.0)
+    # 3x[0.9,0.1], 3x[0.1,0.9], 4x[0.5,0.5]
+    assert (b[0] == [0.9, 0.1]).all() and (b[3] == [0.1, 0.9]).all() \
+        and (b[6] == [0.5, 0.5]).all()
+    m = label_skew_partitions(3, 10)
+    assert m.shape == (10, 3)
+    assert (m[0] == [0.9, 0.05, 0.05]).all()
+
+
+def test_federated_batches_shapes():
+    task = make_task("sst2")
+    parts = label_skew_partitions(2, 10)
+    batch = next(iter(federated_batches(task, parts, 8, 3, 1)))
+    assert batch["tokens"].shape == (3, 10, 8, task.seq_len)
+    assert batch["labels"].shape == (3, 10, 8)
+    assert batch["tokens"].dtype == np.int32
+
+
+def test_synthetic_task_learnable_signal():
+    """Class-0 and class-1 sequences must differ in token statistics."""
+    task = make_task("sst2")
+    rng = np.random.default_rng(0)
+    t0 = task.sample(np.zeros(200, int), rng)
+    t1 = task.sample(np.ones(200, int), rng)
+    # signal tokens of class 0 appear more in class-0 samples
+    sig0 = set(task._signal[0].tolist())
+    f0 = np.isin(t0, list(sig0)).mean()
+    f1 = np.isin(t1, list(sig0)).mean()
+    assert f0 > 3 * f1
+
+
+def test_adamw_masked_update(key):
+    opt = AdamW(lr=0.1, weight_decay=0.0)
+    params = {"a": jnp.ones(4), "b": jnp.ones(4)}
+    grads = {"a": jnp.ones(4), "b": jnp.ones(4)}
+    state = opt.init(params)
+    mask = lambda path: 0.0 if path[-1].key == "a" else 1.0
+    new, state2 = opt.update(grads, state, params, update_mask=mask)
+    np.testing.assert_allclose(np.asarray(new["a"]), 1.0)   # frozen
+    assert float(jnp.max(jnp.abs(new["b"] - 1.0))) > 0.01   # moved
+    # frozen leaf's moments untouched
+    np.testing.assert_allclose(np.asarray(state2.mu["a"]), 0.0)
+    assert float(jnp.max(jnp.abs(state2.mu["b"]))) > 0
+
+
+def test_adamw_scale_invariance(key):
+    """Per-client loss scaling by 1/m must not change AdamW directions
+    (the fedtrain design assumption)."""
+    opt = AdamW(lr=0.1, eps=1e-12, weight_decay=0.0)
+    p = {"w": jax.random.normal(key, (8,))}
+    g = {"w": jax.random.normal(jax.random.fold_in(key, 1), (8,))}
+    s1, s2 = opt.init(p), opt.init(p)
+    n1, _ = opt.update(g, s1, p)
+    n2, _ = opt.update(jax.tree.map(lambda x: x / 7.0, g), s2, p)
+    np.testing.assert_allclose(np.asarray(n1["w"]), np.asarray(n2["w"]),
+                               rtol=1e-4)
+
+
+def test_tstar_selectors_monotone():
+    rhos = [0.5, 0.9, 0.99, 0.999]
+    ts = [optimal_switching_interval(r) for r in rhos]
+    assert ts == sorted(ts)
+    ps = [0.5, 0.1, 0.02]
+    lam = 10.0
+    te = [optimal_switching_interval_edge_activation(p, lam) for p in ps]
+    assert te == sorted(te)
+
+
+def test_param_sharding_rules():
+    """Megatron rules: column weights shard d_out, row weights shard d_in,
+    embed shards vocab, nothing shards rank/group dims."""
+    import os as _os
+    from jax.sharding import PartitionSpec as P
+    from repro.dist.sharding import _param_spec, DEFAULT_AXIS_MAP
+
+    class FakeMesh:
+        shape = {"data": 4, "model": 4}
+        axis_names = ("data", "model")
+
+    m = FakeMesh()
+    am = DEFAULT_AXIS_MAP
+    assert _param_spec("groups/0/attn/wq", (8, 64, 64), m, am) == \
+        P(None, None, "model")
+    assert _param_spec("groups/0/attn/wo", (8, 64, 64), m, am) == \
+        P(None, "model", None)
+    assert _param_spec("embed", (512, 64), m, am) == P("model", None)
+    assert _param_spec("unembed", (64, 512), m, am) == P(None, "model")
+    # expert-parallel rule: expert dim (divisible by model axis) shards
+    # over "model"; with fsdp the w_down output dim shards over "data"
+    assert _param_spec("groups/0/moe/w_down", (4, 64, 64), m, am,
+                       fsdp=True) == P("model", None, "data")
+    # non-divisible expert count falls back to row-parallel TP
+    assert _param_spec("groups/0/moe/w_down", (3, 64, 64), m, am) == \
+        P(None, "model", None)
+    # non-divisible dims stay unsharded
+    assert _param_spec("x/wq", (7, 9), m, am) == P(None, None)
+
+
+def test_rho_estimate_bounds():
+    topo = make_topology("complete", 8, p=1.0, seed=0)
+    rho = topo.rho_estimate(50)
+    assert 0.0 <= rho < 1.0
+    sparse = make_topology("complete", 8, p=0.01, seed=0)
+    assert sparse.rho_estimate(50) > rho
