@@ -19,7 +19,8 @@ def run(quick: bool = True):
     results = sweep(settings)
 
     print("\n=== Fig.4: TAD−LoRA accuracy gain on MNLI over (p, T) ===")
-    print(f"{'p\\T':>6} " + " ".join(f"{T:>8}" for T in t_grid))
+    corner = "p\\T"
+    print(f"{corner:>6} " + " ".join(f"{T:>8}" for T in t_grid))
     grid = {}
     for p in P_GRID:
         base = mean_over_seeds(results, seeds=list(seeds), method="lora",

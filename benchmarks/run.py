@@ -3,14 +3,19 @@
   PYTHONPATH=src python -m benchmarks.run            # quick mode
   PYTHONPATH=src python -m benchmarks.run --paper    # full sweeps
   PYTHONPATH=src python -m benchmarks.run --only fig2,theory
+  PYTHONPATH=src python -m benchmarks.run --json out.json   # machine-readable
 
 Each module prints its own table and returns a result dict; a final
 ``name,us_per_call,derived`` CSV line per benchmark summarizes wall time
-and the headline derived quantity.
+and the headline derived quantity. ``--json`` additionally writes the
+summary rows as ``[{name, us, headline, failed}]``; the "kernels" bench
+also records the mixing perf trajectory to ``--mixing-json``
+(BENCH_mixing.json by default).
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 import traceback
@@ -42,7 +47,10 @@ def _headline(name: str, result) -> str:
                         for v in result.values())
             return f"adaptive_vs_T1_worstcase={worst:+.4f}"
         if name == "kernels":
-            return f"n_kernels={len(result)}"
+            mix = result.get("mixing") or []
+            best = max((r["speedup"] for r in mix), default=0.0)
+            return (f"n_kernels={len(result) - ('mixing' in result)},"
+                    f"mix_speedup_max={best:.2f}x")
         if name == "roofline":
             ok = sum(1 for v in result.values() if v == "ok")
             return f"combos_ok={ok}"
@@ -57,6 +65,11 @@ def main() -> None:
                     help="full sweeps (slower; paper-scale grids)")
     ap.add_argument("--only", default="",
                     help="comma-separated subset of: " + ",".join(BENCHES))
+    ap.add_argument("--json", default="",
+                    help="write per-benchmark summary rows to this path")
+    ap.add_argument("--mixing-json", default="BENCH_mixing.json",
+                    help="where the kernels bench records the mixing "
+                         "perf trajectory ('' disables)")
     args = ap.parse_args()
     quick = not args.paper
     selected = [b.strip() for b in args.only.split(",") if b.strip()] \
@@ -73,6 +86,7 @@ def main() -> None:
             "kernels": kernel_micro, "roofline": roofline_report}
 
     csv_rows = []
+    json_rows = []
     failed = []
     for name in selected:
         if name not in mods:
@@ -80,19 +94,32 @@ def main() -> None:
             continue
         print(f"\n{'='*70}\n## {name}  ({mods[name].__doc__.splitlines()[0]})"
               f"\n{'='*70}", flush=True)
+        kwargs = {}
+        if name == "kernels" and args.mixing_json:
+            kwargs["json_path"] = args.mixing_json
         t0 = time.time()
         try:
-            result = mods[name].run(quick=quick)
+            result = mods[name].run(quick=quick, **kwargs)
             us = (time.time() - t0) * 1e6
-            csv_rows.append(f"{name},{us:.0f},{_headline(name, result)}")
+            headline = _headline(name, result)
+            csv_rows.append(f"{name},{us:.0f},{headline}")
+            json_rows.append({"name": name, "us": round(us),
+                              "headline": headline, "failed": False})
         except Exception as e:  # noqa: BLE001
             traceback.print_exc()
             failed.append(name)
             csv_rows.append(f"{name},0,FAILED:{type(e).__name__}")
+            json_rows.append({"name": name, "us": 0,
+                              "headline": f"FAILED:{type(e).__name__}",
+                              "failed": True})
 
     print(f"\n{'='*70}\n## summary (name,us_per_call,derived)\n{'='*70}")
     for row in csv_rows:
         print(row)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(json_rows, f, indent=1)
+        print(f"wrote {args.json}")
     if failed:
         sys.exit(1)
 

@@ -34,10 +34,17 @@ def _ab_mask(masks):
     return fn
 
 
+_MIX_IMPLS = {
+    "planned": mixing.mix_tree_planned,    # default: plan-cached fused path
+    "per_leaf": mixing.mix_tree,           # the oracle
+    "concat": mixing.mix_tree_concat,      # legacy fused (no plan cache)
+}
+
+
 def make_dfl_round(loss_fn: Callable, optimizer: AdamW, *,
                    local_steps: int = 1,
-                   mix_impl: str = "per_leaf",
-                   donate: bool = True):
+                   mix_impl: str = "planned",
+                   donate: bool = False):
     """Build the jit-able round function.
 
     loss_fn(base_params, lora, microbatch) -> scalar loss
@@ -47,9 +54,15 @@ def make_dfl_round(loss_fn: Callable, optimizer: AdamW, *,
     Returns round_fn(base_params, lora, opt_state, batch, W, masks)
       -> (lora, opt_state, metrics)
     ``batch`` leaves have a leading (local_steps, ...) axis.
+
+    mix_impl "planned" (default) mixes through a cached MixPlan: one fused
+    gossip_mix_seg sweep, one collective under GSPMD. "per_leaf" is the
+    bit-for-bit oracle (at equal masks); "concat" the legacy fused variant.
+    With ``donate`` the returned function is jitted with the lora/opt_state
+    buffers donated (in-place round at production scale) — callers must
+    then treat the passed-in trees as consumed.
     """
-    mix = (mixing.mix_tree if mix_impl == "per_leaf"
-           else mixing.mix_tree_concat)
+    mix = _MIX_IMPLS[mix_impl]
 
     def round_fn(base_params, lora, opt_state: AdamWState, batch, W, masks):
         mask_fn = _ab_mask(masks)
@@ -71,6 +84,8 @@ def make_dfl_round(loss_fn: Callable, optimizer: AdamW, *,
         metrics = {"loss": jnp.mean(losses), "loss_per_step": losses}
         return lora_new, opt_new, metrics
 
+    if donate:
+        return jax.jit(round_fn, donate_argnums=(1, 2))
     return round_fn
 
 

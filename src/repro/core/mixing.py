@@ -9,11 +9,34 @@ by GSPMD to collectives over the client axis.
 ``mix_masks`` lets one compiled step express all four paper methods: a leaf
 is mixed when its mask is 1, left untouched when 0 (traced scalars, so the
 method/phase never triggers recompilation).
+
+Three lowerings, equal numerics:
+  mix_tree         — per-leaf einsum + blend (the oracle; one collective
+                     per leaf under GSPMD).
+  mix_tree_concat  — legacy fused variant: re-derives the flatten layout
+                     from tree paths on every call.
+  mix_tree_planned — the default fast path: a MixPlan (built once per
+                     treedef/shape signature, cached) precomputes per-leaf
+                     offsets, the padded (m, P) layout aligned to the
+                     gossip_mix kernel's bp stripe, and the a/b column
+                     segment indicator, so the per-round work is one
+                     gather into the flat buffer, ONE gossip_mix_seg call
+                     (one collective under GSPMD, unequal masks folded
+                     into the per-segment W_eff), and one unflatten — no
+                     per-round Python tree traversal.
 """
 from __future__ import annotations
 
+import math
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import numpy as np
+
 import jax
 import jax.numpy as jnp
+
+from repro.kernels import ops
 
 
 def mix_leaf(W: jax.Array, leaf: jax.Array) -> jax.Array:
@@ -66,3 +89,149 @@ def mix_tree_concat(W: jax.Array, lora, mask_a: jax.Array, mask_b: jax.Array):
         mask = mask_a if name == "a" else mask_b
         out.append((mask * restored + (1.0 - mask) * leaf).astype(leaf.dtype))
     return jax.tree_util.tree_unflatten(treedef, out)
+
+
+# ===========================================================================
+# Planned fused mixing (the default fast path)
+# ===========================================================================
+
+_KERNEL_BP = 512    # gossip_mix stripe width the flat buffer is padded to
+
+
+@dataclass(frozen=True)
+class _LeafSlot:
+    """Static placement of one LoRA leaf inside the flat (m, P) buffer."""
+    offset: int          # first column
+    cols: int            # columns per client (= leaf.size / m)
+    lead: tuple          # leading (group-stack) dims before the client axis
+    tail: tuple          # trailing (d0, d1) dims
+    is_a: bool           # "a" leaf -> mask_a segment, else mask_b
+
+
+@dataclass(frozen=True)
+class MixPlan:
+    """Precomputed flatten plan for one LoRA tree structure.
+
+    Built once per (treedef, leaf shapes/dtypes, bp) signature — see
+    ``get_mix_plan`` — and reused for every round on that structure, so
+    the per-round path never walks tree paths or re-derives offsets.
+    ``a_indicator`` is the (1, padded) column-segment constant that folds
+    unequal a/b masks into the kernel's per-segment W_eff.
+    """
+    m: int               # clients
+    cols: int            # total columns per client (unpadded)
+    padded: int          # cols rounded up to a multiple of bp
+    bp: int
+    slots: tuple         # tuple[_LeafSlot, ...] in tree-flatten order
+    treedef: Any
+    a_indicator: np.ndarray   # (1, padded) float32; 1.0 on "a" columns
+
+    def segment_mask(self, mask_a, mask_b):
+        """(1, padded) per-column blend mask from the two scalar masks."""
+        ind = self.a_indicator
+        return mask_a * ind + mask_b * (1.0 - ind)
+
+
+_PLAN_CACHE: dict = {}
+_PLAN_BUILDS = [0]
+
+
+def plan_builds() -> int:
+    """How many MixPlans have been constructed (test/diagnostic hook)."""
+    return _PLAN_BUILDS[0]
+
+
+def build_mix_plan(lora, *, bp: int = _KERNEL_BP) -> MixPlan:
+    """Walk the tree ONCE: record each leaf's slot and the a/b segments."""
+    leaves_p, treedef = jax.tree_util.tree_flatten_with_path(lora)
+    if not leaves_p:
+        raise ValueError("empty LoRA tree")
+    m = leaves_p[0][1].shape[-3]
+    slots, ind_parts = [], []
+    off = 0
+    for path, leaf in leaves_p:
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        cols = math.prod(leaf.shape) // m
+        slots.append(_LeafSlot(offset=off, cols=cols,
+                               lead=tuple(leaf.shape[:-3]),
+                               tail=tuple(leaf.shape[-2:]),
+                               is_a=(name == "a")))
+        ind_parts.append(np.full(cols, 1.0 if name == "a" else 0.0,
+                                 np.float32))
+        off += cols
+    padded = off + ((-off) % bp)
+    if padded > off:
+        ind_parts.append(np.zeros(padded - off, np.float32))
+    _PLAN_BUILDS[0] += 1
+    return MixPlan(m=m, cols=off, padded=padded, bp=bp, slots=tuple(slots),
+                   treedef=treedef,
+                   a_indicator=np.concatenate(ind_parts)[None, :])
+
+
+def get_mix_plan(lora, *, bp: int = _KERNEL_BP) -> MixPlan:
+    """Cached ``build_mix_plan`` keyed on the tree's static signature."""
+    leaves, treedef = jax.tree_util.tree_flatten(lora)
+    key = (treedef, bp,
+           tuple((tuple(x.shape), jnp.dtype(x.dtype).name) for x in leaves))
+    plan = _PLAN_CACHE.get(key)
+    if plan is None:
+        plan = _PLAN_CACHE[key] = build_mix_plan(lora, bp=bp)
+    return plan
+
+
+def _use_flat_lowering() -> bool:
+    """The single-buffer gossip_mix lowering pays two extra full-buffer
+    copies (gather into (m, P), scatter back out). Under a bound mesh that
+    buys ONE collective for the whole tree (the point of the fused step)
+    and on TPU the copies are cheap HBM sweeps; on a plain CPU backend the
+    per-leaf dots stay cache-resident and the copies dominate, so the
+    planned path keeps the W_eff-folded per-slot dots instead (measured
+    ~4x: BENCH_mixing.json)."""
+    from repro.dist import sharding as shd
+    return shd.current_mesh() is not None or jax.default_backend() == "tpu"
+
+
+def mix_tree_planned(W: jax.Array, lora, mask_a, mask_b, *,
+                     plan: Optional[MixPlan] = None):
+    """Plan-cached fused mixing (the default fast path).
+
+    Masks are folded into per-segment effective mixing matrices
+    W_eff = mask·W + (1−mask)·I — the blend never touches the (m, P)
+    payload as a separate pass. Under a mesh (or on TPU) the whole tree is
+    mixed by ONE gossip_mix_seg kernel call / ONE collective on the
+    plan's padded flat layout; otherwise each slot is a single dot with
+    its segment's W_eff. Numerically equal to mix_tree for all masks and
+    bit-for-bit at equal masks (W_eff reduces to W exactly).
+    """
+    plan = plan if plan is not None else get_mix_plan(lora)
+    leaves = jax.tree_util.tree_leaves(lora)
+    m = plan.m
+
+    if _use_flat_lowering():
+        parts = [jnp.moveaxis(x, -3, 0).reshape(m, -1) for x in leaves]
+        if plan.padded > plan.cols:
+            parts.append(jnp.zeros((m, plan.padded - plan.cols),
+                                   parts[0].dtype))
+        flat = jnp.concatenate(parts, axis=1)
+        seg = plan.segment_mask(mask_a, mask_b).astype(flat.dtype)
+        mixed = ops.gossip_mix_seg(W.astype(flat.dtype), flat, seg)
+        out = []
+        for slot, leaf in zip(plan.slots, leaves):
+            chunk = mixed[:, slot.offset:slot.offset + slot.cols]
+            restored = chunk.reshape(m, *slot.lead, *slot.tail)
+            restored = jnp.moveaxis(restored, 0, len(slot.lead))
+            out.append(restored.astype(leaf.dtype))
+        return jax.tree_util.tree_unflatten(plan.treedef, out)
+
+    # cache-local lowering: two (m, m) W_eff folds per round, then one
+    # blend-free dot per slot (is_a is plan-static — no path inspection)
+    eye = jnp.eye(m, dtype=W.dtype)
+    w_a = mask_a * W + (1.0 - mask_a) * eye
+    w_b = mask_b * W + (1.0 - mask_b) * eye
+    out = [
+        jnp.einsum("ij,...jdr->...idr",
+                   (w_a if slot.is_a else w_b).astype(leaf.dtype),
+                   leaf).astype(leaf.dtype)
+        for slot, leaf in zip(plan.slots, leaves)
+    ]
+    return jax.tree_util.tree_unflatten(plan.treedef, out)

@@ -1,0 +1,9 @@
+"""Distribution substrate: the logical-axis sharding layer (GSPMD).
+
+``repro.dist.sharding`` is the single place where logical axis names
+("clients", "batch", "model", "fsdp", ...) meet concrete mesh axes.
+Model and launch code never name mesh axes directly.
+"""
+from repro.dist import sharding
+
+__all__ = ["sharding"]

@@ -1,0 +1,215 @@
+"""Logical-axis sharding: the mapping layer between model code and meshes.
+
+Model / launch code annotates arrays with *logical* dim names ("clients",
+"batch", "model", "fsdp", "seq", "seq_act"); a (mesh, axis_map) pair bound
+via ``set_mesh`` translates those names to mesh axes. Outside a bound mesh
+every annotation is a no-op, so the same model code runs unchanged on a
+laptop CPU and a 512-chip pod.
+
+``DEFAULT_AXIS_MAP`` routes the DFL client axis over ("pod", "data") —
+axes absent from the mesh in use are dropped at resolution time, so one
+map serves the single-pod (16, 16) mesh (clients over "data"), the
+multi-pod (2, 16, 16) mesh (clients over pod x data — gossip across the
+DCN boundary, the paper's inter-site links), the (2, 2) debug mesh, and
+the 1x1 test mesh (everything replicated).
+
+Parameter sharding follows Megatron rules (`_param_spec`): column weights
+shard d_out, row weights shard d_in, embeddings shard the vocab dim,
+stacked MoE experts shard the expert dim when divisible; rank/group dims
+are never sharded. Non-divisible dims stay unsharded rather than erroring
+— reduced test configs must lower on any mesh.
+"""
+from __future__ import annotations
+
+import math
+import threading
+from typing import Optional
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# ---------------------------------------------------------------------------
+# Axis maps
+# ---------------------------------------------------------------------------
+
+DEFAULT_AXIS_MAP: dict = {
+    "clients": ("pod", "data"),
+    "batch": ("pod", "data"),
+    "fsdp": ("data",),
+    "model": ("model",),
+}
+
+# The multi-pod mesh uses the same logical routing — "pod" simply resolves
+# there. Kept as a distinct name so launch code can document intent (and
+# diverge later, e.g. pod-local FSDP).
+MULTIPOD_AXIS_MAP: dict = dict(DEFAULT_AXIS_MAP)
+
+_STATE = threading.local()
+
+
+def set_mesh(mesh, axis_map: Optional[dict] = None) -> None:
+    """Bind (mesh, axis_map) for `logical` / `axis_size` resolution."""
+    _STATE.mesh = mesh
+    _STATE.axis_map = dict(axis_map if axis_map is not None
+                           else DEFAULT_AXIS_MAP)
+
+
+def clear_mesh() -> None:
+    _STATE.mesh = None
+    _STATE.axis_map = None
+
+
+def current_mesh():
+    return getattr(_STATE, "mesh", None)
+
+
+def current_axis_map() -> Optional[dict]:
+    return getattr(_STATE, "axis_map", None)
+
+
+# ---------------------------------------------------------------------------
+# Resolution
+# ---------------------------------------------------------------------------
+
+def resolve_axes(mesh, axes) -> tuple:
+    """Mesh axes for a logical mapping, dropping axes the mesh lacks."""
+    if not axes:
+        return ()
+    return tuple(a for a in axes if a in mesh.axis_names)
+
+
+def axes_size(mesh, axes) -> int:
+    """Product of the mapped mesh-axis sizes (1 when nothing resolves)."""
+    return math.prod(mesh.shape[a] for a in resolve_axes(mesh, axes))
+
+
+def axis_size(name: str) -> int:
+    """Size of a *logical* axis under the bound mesh (1 when unbound)."""
+    mesh, amap = current_mesh(), current_axis_map()
+    if mesh is None or amap is None:
+        return 1
+    return axes_size(mesh, amap.get(name, ()))
+
+
+def _entry(axes: tuple):
+    """PartitionSpec entry: bare name for one axis, tuple for several."""
+    return axes[0] if len(axes) == 1 else axes
+
+
+def spec_for(shape, names, mesh, axis_map) -> P:
+    """PartitionSpec from per-dim logical names.
+
+    A dim is sharded only when its mapped axes resolve on the mesh, are
+    not already consumed by an earlier dim, have product > 1, and divide
+    the dim — otherwise it stays replicated (never an error).
+    """
+    parts: list = []
+    used: set = set()
+    for dim, name in zip(shape, names):
+        axes = resolve_axes(mesh, axis_map.get(name, ())) if name else ()
+        if axes and all(a not in used for a in axes):
+            n = math.prod(mesh.shape[a] for a in axes)
+            if n > 1 and dim % n == 0:
+                parts.append(_entry(axes))
+                used.update(axes)
+                continue
+        parts.append(None)
+    return P(*parts)
+
+
+def logical(x: jax.Array, *names) -> jax.Array:
+    """Constrain ``x``'s sharding by logical dim names (no-op unbound)."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    amap = current_axis_map() or DEFAULT_AXIS_MAP
+    spec = spec_for(x.shape, names, mesh, amap)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# Parameter sharding (Megatron rules)
+# ---------------------------------------------------------------------------
+
+# Row-parallel weights contract their *input* dim against a column-sharded
+# activation: shard d_in, all-reduce the output. Everything else matrix-
+# shaped defaults to column-parallel (shard d_out).
+_ROW_PARALLEL = frozenset({"wo", "w_down", "w_out"})
+
+
+def _param_spec(path: str, shape, mesh, axis_map, fsdp: bool = False) -> P:
+    """PartitionSpec for one parameter leaf.
+
+    path is "/"-joined tree keys (e.g. "groups/0/attn/wq"); only the leaf
+    name and a "moe" path component participate in classification. With
+    ``fsdp`` the non-TP matrix dim additionally shards over the "fsdp"
+    logical axis.
+    """
+    name = path.rsplit("/", 1)[-1]
+    nd = len(shape)
+    parts: list = [None] * nd
+    model = resolve_axes(mesh, axis_map.get("model", ()))
+    data = resolve_axes(mesh, axis_map.get("fsdp", ()))
+    m_n = math.prod(mesh.shape[a] for a in model) if model else 1
+    d_n = math.prod(mesh.shape[a] for a in data) if data else 1
+
+    if nd < 2:
+        return P(*parts)          # norms / biases / scalars: replicated
+
+    if name == "embed":           # (vocab, d): shard the vocab dim
+        if m_n > 1 and shape[0] % m_n == 0:
+            parts[0] = _entry(model)
+        return P(*parts)
+    if name == "unembed":         # (d, vocab): shard the vocab dim
+        if m_n > 1 and shape[-1] % m_n == 0:
+            parts[-1] = _entry(model)
+        return P(*parts)
+
+    # Stacked MoE experts (E, d0, d1): expert-parallel over "model" when E
+    # divides it (dense-EP — each device holds only its local experts);
+    # under fsdp the d_model matrix dim additionally shards over "data".
+    in_moe = "moe" in path.split("/")
+    if in_moe and nd == 3 and m_n > 1 and shape[0] % m_n == 0 \
+            and set(model) != set(data):
+        parts[0] = _entry(model)
+        if fsdp and d_n > 1:
+            dm = 2 if name in _ROW_PARALLEL else 1
+            if shape[dm] % d_n == 0:
+                parts[dm] = _entry(data)
+        return P(*parts)
+
+    # Generic matrix (leading group/stack dims never sharded): TP on the
+    # last two dims per row/column classification.
+    tp_dim = nd - 2 if name in _ROW_PARALLEL else nd - 1
+    other = nd - 1 if name in _ROW_PARALLEL else nd - 2
+    if m_n > 1 and shape[tp_dim] % m_n == 0:
+        parts[tp_dim] = _entry(model)
+    if fsdp and d_n > 1 and shape[other] % d_n == 0 \
+            and not set(data) & set(model):
+        parts[other] = _entry(data)
+    return P(*parts)
+
+
+def _path_str(path) -> str:
+    out = []
+    for k in path:
+        if hasattr(k, "key"):
+            out.append(str(k.key))
+        elif hasattr(k, "idx"):
+            out.append(str(k.idx))
+        else:
+            out.append(str(k))
+    return "/".join(out)
+
+
+def param_shardings(params, mesh, axis_map: Optional[dict] = None, *,
+                    fsdp: bool = False):
+    """NamedSharding tree for a parameter (or ShapeDtypeStruct) tree."""
+    amap = axis_map if axis_map is not None else DEFAULT_AXIS_MAP
+
+    def one(path, leaf):
+        spec = _param_spec(_path_str(path), leaf.shape, mesh, amap,
+                           fsdp=fsdp)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, params)

@@ -1,0 +1,13 @@
+"""Pallas API compatibility shims.
+
+jax renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams``; support
+both so the kernels import on every jax in the support window.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or pltpu.TPUCompilerParams
+
+__all__ = ["CompilerParams"]

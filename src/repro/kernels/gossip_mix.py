@@ -6,6 +6,12 @@ X is the (m, P) buffer of all client LoRA factors flattened and
 concatenated (both blocks → ONE kernel pass / ONE upstream collective,
 the joint-mixing step the paper adds).
 
+With a ``seg`` operand — a (1, P) per-column mask from the MixPlan's a/b
+segment layout (core.mixing) — the kernel instead computes
+y = seg·(W@X) + (1−seg)·X, i.e. a *per-segment* W_eff: unequal a/b masks
+(alternating phases, damped mixing) stay one fused HBM sweep instead of a
+per-leaf blend pass after the matmul.
+
 m (clients) is small (10–64): W_eff stays whole in VMEM; the grid streams
 P in bp-wide stripes. VPU/MXU work is trivial — the kernel exists to make
 the mixing a single fused HBM sweep instead of per-leaf dispatches.
@@ -13,11 +19,14 @@ the mixing a single fused HBM sweep instead of per-leaf dispatches.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+from jax.experimental.pallas import tpu as pltpu  # noqa: F401
+
+from repro.kernels import compat
 
 
 def _kernel(w_ref, x_ref, o_ref):
@@ -27,23 +36,41 @@ def _kernel(w_ref, x_ref, o_ref):
                          ).astype(o_ref.dtype)
 
 
+def _kernel_seg(w_ref, x_ref, s_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)
+    y = jnp.dot(w_ref[...].astype(jnp.float32), x,
+                preferred_element_type=jnp.float32)
+    s = s_ref[...].astype(jnp.float32)
+    o_ref[...] = (s * y + (1.0 - s) * x).astype(o_ref.dtype)
+
+
 @functools.partial(jax.jit, static_argnames=("bp", "interpret"))
-def gossip_mix(w_eff: jax.Array, x: jax.Array, *, bp: int = 512,
+def gossip_mix(w_eff: jax.Array, x: jax.Array,
+               seg: Optional[jax.Array] = None, *, bp: int = 512,
                interpret: bool = False) -> jax.Array:
-    """w_eff: (m, m); x: (m, P) -> (m, P). P padded to bp upstream."""
+    """w_eff: (m, m); x: (m, P) -> (m, P). P padded to bp upstream.
+    seg: optional (1, P) per-column blend mask (see module docstring)."""
     m, P = x.shape
     bp = min(bp, P)
     assert P % bp == 0, (P, bp)
+    in_specs = [
+        pl.BlockSpec((m, m), lambda j: (0, 0)),
+        pl.BlockSpec((m, bp), lambda j: (0, j)),
+    ]
+    operands = (w_eff, x)
+    kernel = _kernel
+    if seg is not None:
+        assert seg.shape == (1, P), (seg.shape, P)
+        in_specs.append(pl.BlockSpec((1, bp), lambda j: (0, j)))
+        operands = (w_eff, x, seg)
+        kernel = _kernel_seg
     return pl.pallas_call(
-        _kernel,
+        kernel,
         grid=(P // bp,),
-        in_specs=[
-            pl.BlockSpec((m, m), lambda j: (0, 0)),
-            pl.BlockSpec((m, bp), lambda j: (0, j)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((m, bp), lambda j: (0, j)),
         out_shape=jax.ShapeDtypeStruct((m, P), x.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.CompilerParams(
             dimension_semantics=("arbitrary",)),
         interpret=interpret,
-    )(w_eff, x)
+    )(*operands)

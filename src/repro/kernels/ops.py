@@ -73,6 +73,25 @@ def gossip_mix_flat(w: jax.Array, x: jax.Array, mask: jax.Array | float = 1.0):
     return _gossip(w_eff, x, interpret=(mode == "interpret"))
 
 
+def gossip_mix_seg(w: jax.Array, x: jax.Array, seg: jax.Array):
+    """Mix a flattened (m, P) buffer with a per-column W_eff:
+    y = seg·(W@x) + (1−seg)·x, seg: (1, P). This is the MixPlan fast path —
+    unequal a/b masks fold into the single fused pass via the plan's
+    column-segment layout instead of a per-leaf blend afterwards."""
+    mode = _mode()
+    if mode == "ref":
+        return ref.gossip_mix_seg_ref(w, x, seg)
+    P = x.shape[1]
+    bp = 512
+    pad = (-P) % bp
+    if pad:
+        x_p = jnp.pad(x, ((0, 0), (0, pad)))
+        s_p = jnp.pad(seg, ((0, 0), (0, pad)))
+        return _gossip(w, x_p, s_p,
+                       interpret=(mode == "interpret"))[:, :P]
+    return _gossip(w, x, seg, interpret=(mode == "interpret"))
+
+
 def rglru_scan(a, u):
     m = _mode()
     if m == "ref":

@@ -50,6 +50,16 @@ def gossip_mix_ref(w_eff: jax.Array, x: jax.Array) -> jax.Array:
     return (w_eff.astype(jnp.float32) @ x.astype(jnp.float32)).astype(x.dtype)
 
 
+def gossip_mix_seg_ref(w: jax.Array, x: jax.Array,
+                       seg: jax.Array) -> jax.Array:
+    """y = seg*(w@x) + (1-seg)*x — per-column-segment W_eff blend.
+    w: (m, m) raw mixing matrix; x: (m, P); seg: (1, P) in [0, 1]."""
+    x32 = x.astype(jnp.float32)
+    y = w.astype(jnp.float32) @ x32
+    s = seg.astype(jnp.float32)
+    return (s * y + (1.0 - s) * x32).astype(x.dtype)
+
+
 def rglru_scan_ref(a: jax.Array, u: jax.Array) -> jax.Array:
     """h_t = a_t * h_{t-1} + u_t (h_{-1}=0), along axis 1.
     a, u: (B, T, W) -> h: (B, T, W)."""

@@ -34,7 +34,7 @@ from repro.roofline.analysis import (HW, collective_bytes_from_hlo,
 
 def run_combo(arch: str, shape_name: str, multi_pod: bool, *,
               local_steps: int = 1, axis_map=None,
-              mix_impl: str = "per_leaf", moe_dispatch: str = "dense",
+              mix_impl: str = "planned", moe_dispatch: str = "dense",
               seq_parallel: bool = False,
               client_parallel: bool = False) -> dict:
     from repro.models import moe as moe_mod
@@ -116,8 +116,10 @@ def run_combo(arch: str, shape_name: str, multi_pod: bool, *,
     return rec
 
 
-def _combo_key(arch, shape, mesh_name, local_steps, tag=""):
-    k = f"{arch}|{shape}|{mesh_name}|ls{local_steps}"
+def _combo_key(arch, shape, mesh_name, local_steps, mix_impl, tag=""):
+    # mix_impl is part of the key (cached per_leaf results must not be
+    # served as planned ones); other variant flags go through --tag
+    k = f"{arch}|{shape}|{mesh_name}|ls{local_steps}|mix:{mix_impl}"
     return k + (f"|{tag}" if tag else "")
 
 
@@ -131,8 +133,8 @@ def main() -> None:
     ap.add_argument("--local-steps", type=int, default=1)
     ap.add_argument("--out", default="results/dryrun.json")
     ap.add_argument("--tag", default="", help="cache-key suffix for variants")
-    ap.add_argument("--mix-impl", default="per_leaf",
-                    choices=("per_leaf", "concat"))
+    ap.add_argument("--mix-impl", default="planned",
+                    choices=("planned", "per_leaf", "concat"))
     ap.add_argument("--moe-dispatch", default="dense",
                     choices=("dense", "fused"))
     ap.add_argument("--seq-parallel", action="store_true")
@@ -158,7 +160,8 @@ def main() -> None:
 
     for arch, shape, mp in combos:
         mesh_name = "multi" if mp else "single"
-        key = _combo_key(arch, shape, mesh_name, args.local_steps, args.tag)
+        key = _combo_key(arch, shape, mesh_name, args.local_steps,
+                         args.mix_impl, args.tag)
         if key in results and results[key].get("status") in ("ok", "skipped") \
                 and not args.force:
             print(f"[cached] {key}: {results[key]['status']}")

@@ -71,31 +71,38 @@ class ServeEngine:
                                   max_new=max_new, eos_id=eos_id))
         return rid
 
-    def _reset_slot_cache(self, slot: int) -> None:
-        """Zero the slot's position counters across every layer cache and
-        recurrent state — admission is a per-row reset, nothing else."""
+    def _reset_slot_cache(self, slots: list[int]) -> None:
+        """Zero the slots' position counters across every layer cache and
+        recurrent state — admission is a per-row reset, nothing else.
+        Takes ALL slots admitted this tick at once: one tree pass total
+        instead of rebuilding the whole cache pytree per admitted slot."""
+        rows = np.asarray(slots)
+
         def reset(path, leaf):
             name = path[-1].key if hasattr(path[-1], "key") else ""
             if name == "t":
-                return leaf.at[..., slot].set(0)
+                return leaf.at[..., rows].set(0)
             if name in ("h", "c", "n", "m", "C", "conv"):
-                # recurrent states: zero the slot's row (axis after groups)
+                # recurrent states: zero the slots' rows (axis after groups)
                 axis = 1 if leaf.ndim >= 2 and any(
                     getattr(k, "key", None) == "groups" for k in path) else 0
                 idx = [slice(None)] * leaf.ndim
-                idx[axis] = slot
+                idx[axis] = rows
                 return leaf.at[tuple(idx)].set(0)
             return leaf
         self.cache = jax.tree_util.tree_map_with_path(reset, self.cache)
 
     def _admit(self) -> None:
+        admitted: list[int] = []
         for i, s in enumerate(self.slots):
             if s.req is None and self.queue:
                 req = self.queue.popleft()
-                self._reset_slot_cache(i)
                 s.req = req
                 s.fed = 1
                 self.next_in[i, 0] = req.prompt[0]
+                admitted.append(i)
+        if admitted:
+            self._reset_slot_cache(admitted)
 
     # ------------------------------------------------------------------
     def tick(self) -> int:

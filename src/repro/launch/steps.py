@@ -13,8 +13,6 @@ the full configs.
 """
 from __future__ import annotations
 
-import math
-from functools import partial
 from typing import Optional
 
 import jax
@@ -35,24 +33,9 @@ from repro.optim.adamw import AdamW, AdamWState
 # sharding helpers
 # ---------------------------------------------------------------------------
 
-def _axes_size(mesh: Mesh, axes) -> int:
-    return math.prod(mesh.shape[a] for a in axes)
-
-
 def _ns(mesh: Mesh, shape, names, axis_map) -> NamedSharding:
     """NamedSharding from logical dim names with divisibility checks."""
-    parts = []
-    used = set()
-    for dim, name in zip(shape, names):
-        axes = axis_map.get(name) if name else None
-        if axes and all(a not in used for a in axes):
-            n = _axes_size(mesh, axes)
-            if n > 1 and dim % n == 0:
-                parts.append(axes[0] if len(axes) == 1 else tuple(axes))
-                used.update(axes)
-                continue
-        parts.append(None)
-    return NamedSharding(mesh, P(*parts))
+    return NamedSharding(mesh, shd.spec_for(shape, names, mesh, axis_map))
 
 
 def _sds(shape, dtype, sharding=None):
@@ -116,7 +99,7 @@ def fl_geometry(mesh: Mesh, shape: InputShape,
     product of the mesh axes the "clients" logical axis maps to (the
     client-parallel §Perf variant maps ALL axes -> m = chip count)."""
     if axis_map and axis_map.get("clients"):
-        m = math.prod(mesh.shape[a] for a in axis_map["clients"])
+        m = shd.axes_size(mesh, axis_map["clients"])
     else:
         m = client_count(mesh)
     assert shape.global_batch % m == 0, (shape.global_batch, m)
@@ -128,7 +111,7 @@ def fl_geometry(mesh: Mesh, shape: InputShape,
 # ---------------------------------------------------------------------------
 
 def make_train_step(cfg: ModelConfig, *, local_steps: int = 1,
-                    lr: float = 2e-4, mix_impl: str = "per_leaf"):
+                    lr: float = 2e-4, mix_impl: str = "planned"):
     opt = AdamW(lr=lr)
 
     def loss_fn(base_params, lo, micro):
@@ -247,7 +230,7 @@ def decode_input_specs(cfg: ModelConfig, shape: InputShape, mesh: Mesh, *,
 
 def build(cfg: ModelConfig, shape: InputShape, mesh: Mesh, *,
           local_steps: int = 1, dtype=jnp.bfloat16,
-          axis_map: Optional[dict] = None, mix_impl: str = "per_leaf"):
+          axis_map: Optional[dict] = None, mix_impl: str = "planned"):
     """Returns (step_fn, input_specs, n_tokens, training_flag)."""
     if shape.kind == "train":
         step, _ = make_train_step(cfg, local_steps=local_steps,

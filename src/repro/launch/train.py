@@ -77,8 +77,10 @@ def main() -> None:
         return tf.lm_loss(bp, cfg, micro["tokens"], micro["targets"],
                           frontend=micro.get("frontend"), lora=lo)[0]
 
-    round_fn = jax.jit(make_dfl_round(loss_fn, opt,
-                                      local_steps=args.local_steps))
+    # donate=True: the loop rebinds lora/opt_state every round, so the
+    # round updates them in place (no per-round copy of the client state)
+    round_fn = make_dfl_round(loss_fn, opt, local_steps=args.local_steps,
+                              donate=True)
 
     stream = lm_token_stream(cfg.vocab_size, args.batch * args.local_steps,
                              args.seq, n_clients=m, seed=args.seed)

@@ -143,3 +143,31 @@ def test_identity_mixing_is_noop(setup):
     mixed = mix_tree(W, lora, 1.0, 1.0)
     for l1, l0 in zip(jax.tree.leaves(mixed), jax.tree.leaves(lora)):
         np.testing.assert_allclose(np.asarray(l1), np.asarray(l0), atol=1e-7)
+
+
+def test_planned_round_matches_per_leaf_oracle(setup):
+    """The default round (planned fused mixing) must match a per_leaf
+    round bit-for-bit at equal mix masks — same batch, same W, same
+    state in, identical state out."""
+    cfg, base, lora0, opt, _, task, parts = setup
+
+    def loss_fn(bp, lo, micro):
+        return classifier_loss(bp, cfg, micro["tokens"], micro["labels"],
+                               lora=lo)
+
+    rf_planned = jax.jit(make_dfl_round(loss_fn, opt, local_steps=2))
+    rf_oracle = jax.jit(make_dfl_round(loss_fn, opt, local_steps=2,
+                                       mix_impl="per_leaf"))
+    batch = jax.tree.map(jnp.asarray,
+                         next(iter(federated_batches(task, parts, 8, 2, 1))))
+    topo = make_topology("complete", M, p=0.5, seed=7)
+    W = jnp.asarray(topo.sample(), jnp.float32)
+    masks = round_masks("lora", 0, 1).as_array()    # equal mix masks
+    st1 = opt.init(lora0)
+    st2 = opt.init(lora0)
+    l1, o1, m1 = rf_planned(base, lora0, st1, batch, W, masks)
+    l2, o2, m2 = rf_oracle(base, lora0, st2, batch, W, masks)
+    for a, b in zip(jax.tree.leaves((l1, o1)), jax.tree.leaves((l2, o2))):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(np.asarray(m1["loss"]),
+                                  np.asarray(m2["loss"]))
