@@ -1,53 +1,33 @@
 """Beyond-paper benchmark: ONLINE adaptive-T vs fixed-T vs hindsight-best.
 
 The paper's §VII names online T selection as future work; this benchmark
-runs the AdaptiveTController (spectral ρ̂ estimator, no oracle access)
+runs the `AdaptiveSchedule` (spectral ρ̂ estimator, no oracle access)
 against (a) the naive fixed T=1, (b) the hindsight-best fixed T from the
-fig3 sweep, across communication regimes on MNLI.
+fig3 sweep, across communication regimes on MNLI. Both regimes run
+through one `repro.api.Session` — only the `MaskSchedule` differs.
 """
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import (BATCH, DEFAULT_LOCAL_STEPS, DEFAULT_ROUNDS,
-                               EVAL_N, N_CLIENTS, Setting, _build_fns,
-                               cached_run, mean_over_seeds, sweep)
-from repro.core import make_topology
-from repro.core.adaptive import AdaptiveTController, adaptive_round_masks
-from repro.data import federated_batches, label_skew_partitions
-from repro.data.synthetic import eval_batch
+from benchmarks.common import (DEFAULT_ROUNDS, Setting, mean_over_seeds,
+                               sweep)
+from repro.api import AdaptiveSchedule, Session
 
 T_GRID = (1, 2, 3, 5, 10, 15)
 
 
 def run_adaptive(task_name: str, p: float, seed: int, *, c: float = 0.35,
                  rounds: int = DEFAULT_ROUNDS) -> dict:
-    task, cfg, base, lora0, opt, get_round_fn, acc_fn = _build_fns(task_name)
-    parts = label_skew_partitions(task.n_classes, N_CLIENTS)
-    topo = make_topology("complete", N_CLIENTS, p, seed=seed)
-    round_fn = get_round_fn(DEFAULT_LOCAL_STEPS)
-    ctrl = AdaptiveTController(c=c, t_max=15)
-    lora, opt_state = lora0, opt.init(lora0)
-    t_trace = []
-    for batch in federated_batches(task, parts, BATCH, DEFAULT_LOCAL_STEPS,
-                                   rounds, seed=seed + 17):
-        W = np.asarray(topo.sample())
-        ctrl.observe_mixing_matrix(W)
-        masks = adaptive_round_masks(ctrl, "tad").as_array()
-        t_trace.append(ctrl.T)
-        lora, opt_state, _ = round_fn(base, lora, opt_state,
-                                      jax.tree.map(jnp.asarray, batch),
-                                      jnp.asarray(W, jnp.float32), masks)
-    test = eval_batch(task, EVAL_N, seed=9999)
-    toks, labs = jnp.asarray(test["tokens"]), jnp.asarray(test["labels"])
-    accs = [float(acc_fn(base, toks, labs,
-                         jax.tree.map(lambda x: x[..., i, :, :], lora)))
-            for i in range(N_CLIENTS)]
-    return {"acc": float(np.mean(accs)), "T_final": ctrl.T,
-            "T_mean": float(np.mean(t_trace)),
-            "rho_hat": float(np.sqrt(ctrl.rho_sq))}
+    setting = Setting(method="tad", task=task_name, p=p, T=1, seed=seed,
+                      rounds=rounds)
+    schedule = AdaptiveSchedule("tad", c=c, t_max=15)
+    session = Session(setting.config(), schedule=schedule)
+    session.run()
+    ev = session.evaluate()
+    return {"acc": ev["acc"], "T_final": schedule.T,
+            "T_mean": float(np.mean(schedule.t_trace)),
+            "rho_hat": schedule.rho_hat}
 
 
 def run(quick: bool = True):

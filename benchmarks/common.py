@@ -5,28 +5,22 @@ partitions, Erdős–Rényi edge-activation gossip, R rounds × local steps,
 AdamW, LoRA on Q/V with a frozen head; evaluation = mean accuracy across
 all client models, averaged over seeds.
 
-Results are cached in results/experiments.json keyed by the full setting,
-so sweeps are resumable and benchmarks stay cheap on re-run.
+Since the `repro.api` redesign this module is exactly what it should be:
+a `Setting -> DFLConfig` mapping plus a results-cache callback around
+`Session`. Results are cached in results/experiments.json keyed by the
+config's `cache_key()`, so sweeps are resumable and benchmarks stay cheap
+on re-run (model init and the jitted round are shared across settings by
+the Session build cache).
 """
 from __future__ import annotations
 
-import hashlib
 import json
 import os
-import time
 from dataclasses import asdict, dataclass
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (build_lora_tree, consensus_stats, make_dfl_round,
-                        make_topology, round_masks)
-from repro.data import federated_batches, label_skew_partitions, make_task
-from repro.data.synthetic import eval_batch
-from repro.models.classifier import (classifier_accuracy, classifier_loss,
-                                     encoder_config, init_classifier)
-from repro.optim import AdamW
+from repro.api import Callback, DFLConfig, HistoryRecorder, Session
 
 RESULTS = os.environ.get("REPRO_RESULTS",
                          os.path.join(os.path.dirname(__file__), "..",
@@ -49,6 +43,7 @@ FEATURE_SHIFT = 2
 LR = 8e-3
 BATCH = 16
 EVAL_N = 384
+INIT_SEED = 1234             # all seeds share one init (seed moves data/topo)
 
 
 @dataclass(frozen=True)
@@ -62,79 +57,53 @@ class Setting:
     rounds: int = DEFAULT_ROUNDS
     local_steps: int = DEFAULT_LOCAL_STEPS
 
+    def config(self) -> DFLConfig:
+        return DFLConfig(
+            model="encoder", task=self.task, model_kw=MODEL_KW,
+            n_clients=N_CLIENTS, topology=self.topology, p=self.p,
+            method=self.method, T=self.T, rounds=self.rounds,
+            local_steps=self.local_steps, batch_size=BATCH, lr=LR,
+            feature_shift=FEATURE_SHIFT, seed=self.seed,
+            data_seed=self.seed + 17, init_seed=INIT_SEED,
+            eval_n=EVAL_N, eval_seed=9999)
+
     def key(self) -> str:
-        blob = json.dumps(asdict(self), sort_keys=True)
-        return hashlib.md5(blob.encode()).hexdigest()[:16]
+        return self.config().cache_key()
 
 
-_FN_CACHE: dict = {}
+class ResultsCache(Callback):
+    """on_run_end: evaluate the run and write it through to the shared
+    results/experiments.json (keyed by the config's cache_key)."""
 
+    def __init__(self, setting: Setting):
+        self.setting = setting
+        self.result: dict | None = None
 
-def _build_fns(task_name: str):
-    if task_name in _FN_CACHE:
-        return _FN_CACHE[task_name]
-    task = make_task(task_name, feature_shift=FEATURE_SHIFT)
-    cfg = encoder_config(**MODEL_KW)
-    n_classes = task.n_classes
-    key = jax.random.key(1234)
-    base = init_classifier(key, cfg, n_classes=n_classes)
-    lora0 = build_lora_tree(jax.random.key(99), base, cfg,
-                            n_clients=N_CLIENTS)
-    opt = AdamW(lr=LR)
-
-    def loss_fn(bp, lo, micro):
-        return classifier_loss(bp, cfg, micro["tokens"], micro["labels"],
-                               lora=lo)
-
-    round_fns = {}
-
-    def get_round_fn(local_steps):
-        if local_steps not in round_fns:
-            round_fns[local_steps] = jax.jit(
-                make_dfl_round(loss_fn, opt, local_steps=local_steps))
-        return round_fns[local_steps]
-
-    acc_fn = jax.jit(lambda bp, toks, labs, lo: classifier_accuracy(
-        bp, cfg, toks, labs, lora=lo))
-    _FN_CACHE[task_name] = (task, cfg, base, lora0, opt, get_round_fn, acc_fn)
-    return _FN_CACHE[task_name]
+    def on_run_end(self, session, result) -> None:
+        ev = session.evaluate()
+        self.result = {
+            "acc": ev["acc"], "acc_std_clients": ev["acc_std_clients"],
+            "loss": result.final_loss, "wall_s": round(result.wall_s, 1),
+            "rho": session.topology.rho_estimate(60),
+        }
+        cache = _load_cache()   # re-read: parallel writers
+        cache[self.setting.key()] = {"setting": asdict(self.setting),
+                                     "result": self.result}
+        _save_cache(cache)
 
 
 def run_setting(s: Setting, *, collect_diagnostics: bool = False) -> dict:
     """One DFL run -> {"acc": mean-client accuracy, "loss": final, ...}."""
-    task, cfg, base, lora0, opt, get_round_fn, acc_fn = _build_fns(s.task)
-    parts = label_skew_partitions(task.n_classes, N_CLIENTS)
-    topo = make_topology(s.topology, N_CLIENTS, s.p, seed=s.seed)
-    round_fn = get_round_fn(s.local_steps)
-
-    lora = lora0
-    opt_state = opt.init(lora)
-    diags = []
-    t0 = time.time()
-    for t, batch in enumerate(federated_batches(
-            task, parts, BATCH, s.local_steps, s.rounds, seed=s.seed + 17)):
-        W = jnp.asarray(topo.sample(), jnp.float32)
-        masks = round_masks(s.method, t, s.T).as_array()
-        lora, opt_state, metrics = round_fn(
-            base, lora, opt_state, jax.tree.map(jnp.asarray, batch), W, masks)
-        if collect_diagnostics:
-            st = consensus_stats(lora)
-            diags.append({"round": t,
-                          "cross_norm": float(st["cross_norm"]),
-                          "delta_a_sq": float(st["delta_a_sq"]),
-                          "delta_b_sq": float(st["delta_b_sq"]),
-                          "loss": float(metrics["loss"])})
-    test = eval_batch(task, EVAL_N, seed=9999)
-    toks = jnp.asarray(test["tokens"])
-    labs = jnp.asarray(test["labels"])
-    accs = [float(acc_fn(base, toks, labs,
-                         jax.tree.map(lambda x: x[..., i, :, :], lora)))
-            for i in range(N_CLIENTS)]
-    out = {"acc": float(np.mean(accs)), "acc_std_clients": float(np.std(accs)),
-           "loss": float(metrics["loss"]), "wall_s": round(time.time() - t0, 1),
-           "rho": topo.rho_estimate(60)}
+    cache_cb = ResultsCache(s)
+    callbacks = [cache_cb]
+    diag = None
     if collect_diagnostics:
-        out["diagnostics"] = diags
+        diag = HistoryRecorder(consensus=True)
+        callbacks.append(diag)
+    Session(s.config(), callbacks=callbacks).run()
+    out = dict(cache_cb.result)
+    if diag is not None:
+        out["diagnostics"] = diag.history
     return out
 
 
@@ -156,12 +125,7 @@ def cached_run(s: Setting, **kw) -> dict:
     k = s.key()
     if k in cache and not kw.get("collect_diagnostics"):
         return cache[k]["result"]
-    res = run_setting(s, **kw)
-    cache = _load_cache()   # re-read: parallel writers
-    cache[k] = {"setting": asdict(s), "result":
-                {kk: vv for kk, vv in res.items() if kk != "diagnostics"}}
-    _save_cache(cache)
-    return res
+    return run_setting(s, **kw)
 
 
 def sweep(settings: list[Setting], verbose: bool = True) -> dict:

@@ -67,7 +67,7 @@ def mixing_bench(quick: bool = True):
     # which lowering mix_tree_planned picks on this backend (flat kernel
     # under mesh/TPU vs cache-local per-slot dots) — recorded per row so
     # the perf trajectory stays comparable across backends
-    lowering = "flat" if mixing._use_flat_lowering() else "per_slot"
+    lowering = "flat" if mixing.use_flat_lowering() else "per_slot"
     for m in (10, 64):
         for log_p in log_ps:
             P = 1 << log_p

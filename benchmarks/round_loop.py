@@ -1,0 +1,119 @@
+"""Round-loop overhead: `repro.api.Session` vs the hand-wired legacy loop.
+
+The api redesign replaced seven hand-wired round loops with one Session;
+this benchmark proves the abstraction adds no dispatch overhead. Both
+sides drive the SAME jitted round function (m=10 clients, 60 rounds,
+the benchmark-harness classifier at reduced width): the legacy side is
+the pre-redesign loop body (iterate batches, sample W, static masks,
+call round_fn), the Session side is `Session.run()` with no callbacks.
+Per-round wall time is the min over repetitions; the result goes to
+BENCH_round_loop.json as part of the repo's recorded perf trajectory.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.api import DFLConfig, Session
+from repro.core import make_topology, round_masks
+from repro.data import federated_batches, label_skew_partitions
+
+M = 10
+ROUNDS = 60
+MODEL_KW = dict(n_layers=1, d_model=32, n_heads=2, d_ff=64, vocab_size=256)
+
+
+def _config(rounds: int) -> DFLConfig:
+    return DFLConfig(model="encoder", task="sst2", model_kw=MODEL_KW,
+                     n_clients=M, p=0.5, method="tad", T=3, rounds=rounds,
+                     local_steps=2, batch_size=8, lr=1e-3, seed=0)
+
+
+def _legacy_loop(session: Session, rounds: int) -> float:
+    """The pre-api loop body, wired around the session's own compiled
+    round — measures exactly the loop/dispatch difference."""
+    cfg = session.config
+    session.reset_state()
+    parts = label_skew_partitions(session.task.n_classes, cfg.n_clients)
+    topo = make_topology(cfg.topology, cfg.n_clients, cfg.p, seed=cfg.seed)
+    lora, opt_state = session.lora, session.opt.init(session.lora)
+    t0 = time.perf_counter()
+    for t, batch in enumerate(federated_batches(
+            session.task, parts, cfg.batch_size, cfg.local_steps, rounds,
+            seed=cfg.data_seed)):
+        W = jnp.asarray(topo.sample(), jnp.float32)
+        masks = round_masks(cfg.method, t, cfg.T).as_array()
+        lora, opt_state, metrics = session.round_fn(
+            session.base, lora, opt_state,
+            jax.tree.map(jnp.asarray, batch), W, masks)
+    jax.block_until_ready(lora)
+    return time.perf_counter() - t0
+
+
+def _session_loop(session: Session, rounds: int) -> float:
+    session.reset_state()
+    t0 = time.perf_counter()
+    session.run(rounds)
+    return time.perf_counter() - t0
+
+
+def run(quick: bool = True, json_path: str | None = None) -> dict:
+    rounds = ROUNDS
+    # min over interleaved reps: per-round work is ~6ms on CPU, so the
+    # floor needs several reps to shake scheduler noise out of a ±3% band
+    reps = 5 if quick else 9
+    session = Session(_config(rounds))
+
+    # one warmup pass each (compile + caches), then timed reps interleaved
+    # with the in-pair order ALTERNATING (LS, SL, LS, ...): interleaving
+    # spreads slow drift across both sides, alternation cancels the
+    # within-pair bias a monotone load ramp would otherwise put on
+    # whichever loop runs second
+    _legacy_loop(session, 5)
+    _session_loop(session, 5)
+    legacy_ts, sess_ts = [], []
+    for r in range(reps):
+        if r % 2 == 0:
+            legacy_ts.append(_legacy_loop(session, rounds))
+            sess_ts.append(_session_loop(session, rounds))
+        else:
+            sess_ts.append(_session_loop(session, rounds))
+            legacy_ts.append(_legacy_loop(session, rounds))
+    legacy, sess = min(legacy_ts), min(sess_ts)
+
+    legacy_us = legacy / rounds * 1e6
+    sess_us = sess / rounds * 1e6
+    overhead_pct = (sess_us - legacy_us) / legacy_us * 100.0
+    payload = {
+        "backend": jax.default_backend(),
+        "m": M, "rounds": rounds, "reps": reps,
+        "legacy_us_per_round": round(legacy_us, 1),
+        "session_us_per_round": round(sess_us, 1),
+        "overhead_pct": round(overhead_pct, 2),
+    }
+    print("\n=== round-loop dispatch overhead (Session vs legacy loop) ===")
+    print("loop,us_per_round")
+    print(f"legacy,{legacy_us:.1f}")
+    print(f"session,{sess_us:.1f}")
+    print(f"overhead: {overhead_pct:+.2f}%")
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(payload, f, indent=1)
+        print(f"wrote {json_path}")
+    return payload
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--paper", action="store_true", help="more repetitions")
+    ap.add_argument("--json", default="BENCH_round_loop.json")
+    args = ap.parse_args()
+    run(quick=not args.paper, json_path=args.json or None)
+
+
+if __name__ == "__main__":
+    main()

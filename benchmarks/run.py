@@ -21,7 +21,7 @@ import time
 import traceback
 
 BENCHES = ("fig2", "table1", "fig3", "fig4", "table3", "table5",
-           "theory", "adaptive", "kernels", "roofline")
+           "theory", "adaptive", "kernels", "roofline", "round_loop")
 
 
 def _headline(name: str, result) -> str:
@@ -54,6 +54,8 @@ def _headline(name: str, result) -> str:
         if name == "roofline":
             ok = sum(1 for v in result.values() if v == "ok")
             return f"combos_ok={ok}"
+        if name == "round_loop":
+            return f"session_overhead={result['overhead_pct']:+.2f}%"
     except Exception:
         pass
     return "done"
@@ -70,6 +72,9 @@ def main() -> None:
     ap.add_argument("--mixing-json", default="BENCH_mixing.json",
                     help="where the kernels bench records the mixing "
                          "perf trajectory ('' disables)")
+    ap.add_argument("--round-loop-json", default="BENCH_round_loop.json",
+                    help="where the round_loop bench records the Session "
+                         "overhead trajectory ('' disables)")
     args = ap.parse_args()
     quick = not args.paper
     selected = [b.strip() for b in args.only.split(",") if b.strip()] \
@@ -77,13 +82,14 @@ def main() -> None:
 
     from benchmarks import (adaptive_t, fig2_acc_vs_p, fig3_tstar,
                             fig4_heatmap, kernel_micro, roofline_report,
-                            table1_regimes, table3_weak_avg, table5_ring,
-                            theory_crossterm)
+                            round_loop, table1_regimes, table3_weak_avg,
+                            table5_ring, theory_crossterm)
     mods = {"fig2": fig2_acc_vs_p, "table1": table1_regimes,
             "fig3": fig3_tstar, "fig4": fig4_heatmap,
             "table3": table3_weak_avg, "table5": table5_ring,
             "theory": theory_crossterm, "adaptive": adaptive_t,
-            "kernels": kernel_micro, "roofline": roofline_report}
+            "kernels": kernel_micro, "roofline": roofline_report,
+            "round_loop": round_loop}
 
     csv_rows = []
     json_rows = []
@@ -97,6 +103,8 @@ def main() -> None:
         kwargs = {}
         if name == "kernels" and args.mixing_json:
             kwargs["json_path"] = args.mixing_json
+        if name == "round_loop" and args.round_loop_json:
+            kwargs["json_path"] = args.round_loop_json
         t0 = time.time()
         try:
             result = mods[name].run(quick=quick, **kwargs)

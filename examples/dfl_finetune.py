@@ -2,28 +2,25 @@
 
 Builds a ~100M decoder (gemma3-family geometry scaled down), fine-tunes it
 with TAD-LoRA over a 8-client gossip graph for 200 rounds (LM objective on
-synthetic non-IID token streams), checkpoints the LoRA state, then merges
-the consensus adapters and compares held-out perplexity before/after.
+synthetic non-IID token streams) through a `repro.api.Session`, checkpoints
+the LoRA state, then merges the consensus adapters and compares held-out
+perplexity before/after.
 
   PYTHONPATH=src python examples/dfl_finetune.py [--rounds 200]
 """
 import argparse
 import dataclasses
-import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.checkpoint import save_pytree
+from repro.api import ConsoleLogger, DFLConfig, Session
 from repro.configs import get_config
 from repro.configs.base import LayerSpec, ATTN, DENSE
-from repro.core import (build_lora_tree, client_mean, make_dfl_round,
-                        make_topology, merge_lora, optimal_switching_interval,
-                        round_masks)
+from repro.core import client_mean, merge_lora
 from repro.data.synthetic import lm_token_stream
 from repro.models import transformer as tf
-from repro.optim import AdamW
 
 
 def model_100m():
@@ -60,36 +57,27 @@ def main():
                     help="reduced model + fewer rounds (CI-speed)")
     args = ap.parse_args()
 
-    cfg = get_config("gemma3-1b").reduced() if args.small else model_100m()
-    rounds = 10 if args.small else args.rounds
-    m = args.clients
+    config = DFLConfig(
+        model="gemma3-1b", task="lm", reduced=args.small,
+        n_clients=args.clients, p=args.p, method="tad", T=0,
+        rounds=10 if args.small else args.rounds,
+        local_steps=args.local_steps, batch_size=args.batch,
+        seq_len=args.seq, lr=2e-3, seed=0,
+    )
+    session = Session(config,
+                      model_cfg=None if args.small else model_100m(),
+                      callbacks=[ConsoleLogger(every=20)])
+    cfg, base = session.model_cfg, session.base
 
     n_params = cfg.param_count()
     print(f"model {cfg.name}: {n_params/1e6:.0f}M params, "
-          f"{rounds} rounds x {args.local_steps} local steps, m={m}")
-
-    key = jax.random.key(0)
-    base = tf.init_params(key, cfg)
-    lora = build_lora_tree(jax.random.key(1), base, cfg, n_clients=m)
-    n_lora = sum(x.size for x in jax.tree.leaves(lora)) // m
+          f"{config.rounds} rounds x {config.local_steps} local steps, "
+          f"m={config.n_clients}")
+    n_lora = sum(x.size for x in jax.tree.leaves(session.lora)) \
+        // config.n_clients
     print(f"LoRA params per client: {n_lora/1e3:.1f}K "
           f"({100*n_lora/n_params:.3f}% of base)")
-
-    topo = make_topology("complete", m, p=args.p, seed=0)
-    T = optimal_switching_interval(topo.rho_estimate(100))
-    print(f"T*={T}")
-
-    opt = AdamW(lr=2e-3)
-    opt_state = opt.init(lora)
-
-    def loss_fn(bp, lo, micro):
-        return tf.lm_loss(bp, cfg, micro["tokens"], micro["targets"],
-                          lora=lo)[0]
-
-    round_fn = jax.jit(make_dfl_round(loss_fn, opt,
-                                      local_steps=args.local_steps))
-    stream = lm_token_stream(cfg.vocab_size, args.batch * args.local_steps,
-                             args.seq, n_clients=m, seed=0)
+    print(f"T*={session.T}")
 
     # held-out eval stream (same non-IID mixture, new draws)
     eval_stream = lm_token_stream(cfg.vocab_size, 8, args.seq, seed=777)
@@ -97,24 +85,14 @@ def main():
     ppl0 = perplexity(base, cfg, None, eval_batches)
     print(f"held-out perplexity before training: {ppl0:.1f}")
 
-    t0 = time.time()
-    for t in range(rounds):
-        raw = next(stream)
-        batch = {k: jnp.asarray(v.reshape(m, args.local_steps, args.batch,
-                                          args.seq).swapaxes(0, 1))
-                 for k, v in raw.items()}
-        W = jnp.asarray(topo.sample(), jnp.float32)
-        masks = round_masks("tad", t, T).as_array()
-        lora, opt_state, metrics = round_fn(base, lora, opt_state, batch,
-                                            W, masks)
-        if t % 20 == 0 or t == rounds - 1:
-            print(f"  round {t:4d} loss={float(metrics['loss']):.4f} "
-                  f"({(time.time()-t0)/(t+1):.2f}s/round)")
+    result = session.run()
+    print(f"trained {result.rounds} rounds in {result.wall_s:.1f}s "
+          f"({result.wall_s / result.rounds:.2f}s/round)")
 
-    save_pytree("results/dfl_finetune_lora.npz", {"lora": lora})
+    session.save("results/dfl_finetune_lora.npz")
     print("checkpoint -> results/dfl_finetune_lora.npz")
 
-    consensus = client_mean(lora)
+    consensus = client_mean(session.lora)
     merged = merge_lora(base, consensus, cfg)
     ppl1 = perplexity(merged, cfg, None, eval_batches)
     print(f"held-out perplexity after merge: {ppl1:.1f} "

@@ -1,4 +1,4 @@
-"""Quickstart: TAD-LoRA (Algorithm 1) in ~60 lines of public API.
+"""Quickstart: TAD-LoRA (Algorithm 1) in ~20 lines of declarative API.
 
 Runs 15 decentralized rounds of alternating-LoRA fine-tuning of a reduced
 gemma3-1b on synthetic LM data with 6 clients over a sparse Erdős–Rényi
@@ -6,57 +6,21 @@ gossip graph, printing loss and the theory diagnostics each round.
 
   PYTHONPATH=src python examples/quickstart.py
 """
-import jax
-import jax.numpy as jnp
+from repro.api import ConsoleLogger, DFLConfig, Session
 
-from repro.configs import get_config
-from repro.core import (build_lora_tree, consensus_stats, make_dfl_round,
-                        make_topology, optimal_switching_interval,
-                        round_masks)
-from repro.data.synthetic import lm_token_stream
-from repro.models import transformer as tf
-from repro.optim import AdamW
+config = DFLConfig(
+    model="gemma3-1b", task="lm",            # any assigned arch; reduced()
+    n_clients=6, topology="complete", p=0.15,
+    method="tad", T=0,                       # T=0 -> topology-aware T* (Cor. A.11)
+    rounds=15, local_steps=2, batch_size=4, seq_len=32,
+    lr=1e-3, seed=0,
+)
 
-M, ROUNDS, LOCAL_STEPS, BATCH, SEQ = 6, 15, 2, 4, 32
+session = Session(config, callbacks=[ConsoleLogger(consensus=True)])
+print(f"rho≈{session.rho:.3f} -> topology-aware switching interval "
+      f"T*={session.T}")
+result = session.run()
 
-# 1) model: any assigned architecture; reduced() for CPU
-cfg = get_config("gemma3-1b").reduced()
-key = jax.random.key(0)
-base = tf.init_params(key, cfg)                       # frozen base weights
-lora = build_lora_tree(key, base, cfg, n_clients=M)   # per-client adapters
-
-# 2) communication: ER edge-activation gossip, topology-aware T* (Cor. A.11)
-topo = make_topology("complete", M, p=0.15, seed=0)
-rho = topo.rho_estimate(100)
-T = optimal_switching_interval(rho)
-print(f"rho≈{rho:.3f} -> topology-aware switching interval T*={T}")
-
-# 3) the DFL round (local AdamW on the active block + joint mixing)
-opt = AdamW(lr=1e-3)
-opt_state = opt.init(lora)
-
-def loss_fn(bp, lo, micro):
-    return tf.lm_loss(bp, cfg, micro["tokens"], micro["targets"],
-                      lora=lo)[0]
-
-round_fn = jax.jit(make_dfl_round(loss_fn, opt, local_steps=LOCAL_STEPS))
-
-stream = lm_token_stream(cfg.vocab_size, BATCH * LOCAL_STEPS, SEQ,
-                         n_clients=M, seed=0)
-for t in range(ROUNDS):
-    raw = next(stream)
-    batch = {k: jnp.asarray(
-        v.reshape(M, LOCAL_STEPS, BATCH, SEQ).swapaxes(0, 1))
-        for k, v in raw.items()}
-    W = jnp.asarray(topo.sample(), jnp.float32)       # this round's graph
-    masks = round_masks("tad", t, T).as_array()       # TAD-LoRA (ours)
-    lora, opt_state, metrics = round_fn(base, lora, opt_state, batch, W,
-                                        masks)
-    stats = consensus_stats(lora)
-    phase = "A" if masks[0] else "B"
-    print(f"round {t:2d} [{phase}-phase] loss={float(metrics['loss']):.4f} "
-          f"‖C‖={float(stats['cross_norm']):.2e} "
-          f"Δ_A²={float(stats['delta_a_sq']):.2e} "
-          f"Δ_B²={float(stats['delta_b_sq']):.2e}")
-
-print("done — swap masks to 'rolora'/'ffa'/'lora' to compare baselines.")
+print(f"final loss {result.final_loss:.4f} after {result.rounds} rounds "
+      f"({result.wall_s:.1f}s)")
+print("done — swap method to 'rolora'/'ffa'/'lora' to compare baselines.")

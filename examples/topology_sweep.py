@@ -5,55 +5,29 @@ reports final accuracy + consensus diagnostics — TAD's advantage appears
 as p shrinks (Fig. 2), and the cross-term grows as communication weakens
 (Prop. A.5).
 
-  PYTHONPATH=src python examples/topology_sweep.py
+  PYTHONPATH=src python examples/topology_sweep.py [--rounds 40]
 """
-import jax
-import jax.numpy as jnp
-import numpy as np
+import argparse
 
-from repro.core import (build_lora_tree, consensus_stats, make_dfl_round,
-                        make_topology, round_masks)
-from repro.data import federated_batches, label_skew_partitions, make_task
-from repro.data.synthetic import eval_batch
-from repro.models.classifier import (classifier_accuracy, classifier_loss,
-                                     encoder_config, init_classifier)
-from repro.optim import AdamW
+from repro.api import DFLConfig, Session
 
-M, ROUNDS, LOCAL_STEPS, T = 10, 40, 4, 3
+ap = argparse.ArgumentParser()
+ap.add_argument("--rounds", type=int, default=40)
+args = ap.parse_args()
 
-cfg = encoder_config(n_layers=2, d_model=64, vocab_size=512)
-task = make_task("mnli")
-parts = label_skew_partitions(task.n_classes, M)
-key = jax.random.key(0)
-base = init_classifier(key, cfg, n_classes=task.n_classes)
-lora0 = build_lora_tree(jax.random.key(1), base, cfg, n_clients=M)
-opt = AdamW(lr=2e-3)
-
-def loss_fn(bp, lo, micro):
-    return classifier_loss(bp, cfg, micro["tokens"], micro["labels"],
-                           lora=lo)
-
-round_fn = jax.jit(make_dfl_round(loss_fn, opt, local_steps=LOCAL_STEPS))
-test = eval_batch(task, 384)
-toks, labs = jnp.asarray(test["tokens"]), jnp.asarray(test["labels"])
+base = DFLConfig(
+    model="encoder", task="mnli",
+    model_kw=dict(n_layers=2, d_model=64, vocab_size=512),
+    n_clients=10, rounds=args.rounds, local_steps=4, batch_size=16,
+    T=3, lr=2e-3, seed=0, data_seed=5, eval_seed=10_000,
+)
 
 print(f"{'p':>6} {'method':>8} {'acc':>8} {'‖C‖':>10} {'Δ_A²+Δ_B²':>10}")
 for p in (0.5, 0.1, 0.02):
     for method in ("tad", "rolora"):
-        topo = make_topology("complete", M, p=p, seed=0)
-        lora, opt_state = lora0, opt.init(lora0)
-        for t, batch in enumerate(federated_batches(
-                task, parts, 16, LOCAL_STEPS, ROUNDS, seed=5)):
-            W = jnp.asarray(topo.sample(), jnp.float32)
-            masks = round_masks(method, t, T).as_array()
-            lora, opt_state, _ = round_fn(
-                base, lora, opt_state, jax.tree.map(jnp.asarray, batch),
-                W, masks)
-        accs = [float(classifier_accuracy(
-            base, cfg, toks, labs,
-            lora=jax.tree.map(lambda x: x[..., i, :, :], lora)))
-            for i in range(M)]
-        s = consensus_stats(lora)
-        print(f"{p:>6} {method:>8} {np.mean(accs):>8.4f} "
-              f"{float(s['cross_norm']):>10.2e} "
-              f"{float(s['delta_a_sq'] + s['delta_b_sq']):>10.2e}")
+        session = Session(base.replace(p=p, method=method))
+        session.run()
+        acc = session.evaluate()["acc"]
+        s = session.consensus()
+        print(f"{p:>6} {method:>8} {acc:>8.4f} {s['cross_norm']:>10.2e} "
+              f"{s['delta_a_sq'] + s['delta_b_sq']:>10.2e}")

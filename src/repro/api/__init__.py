@@ -1,0 +1,21 @@
+"""`repro.api` — the declarative DFL experiment layer.
+
+config -> Session -> callbacks: a `DFLConfig` describes the experiment,
+a `Session` owns topology sampling / the compiled mesh-aware round /
+checkpointing, a `MaskSchedule` (static or adaptive) drives the phase
+calendar, and callbacks stream metrics. `repro.core` stays the low-level
+primitive layer underneath.
+"""
+from repro.api.callbacks import (Callback, CheckpointCallback, ConsoleLogger,
+                                 HistoryRecorder)
+from repro.api.config import DFLConfig
+from repro.api.rounds import build_round
+from repro.api.schedule import AdaptiveSchedule, MaskSchedule, StaticSchedule
+from repro.api.session import RoundEvent, RunResult, Session
+
+__all__ = [
+    "DFLConfig", "Session", "RunResult", "RoundEvent",
+    "MaskSchedule", "StaticSchedule", "AdaptiveSchedule",
+    "Callback", "ConsoleLogger", "HistoryRecorder", "CheckpointCallback",
+    "build_round",
+]

@@ -1,0 +1,78 @@
+"""Callbacks: metrics streaming, history recording, periodic checkpoints.
+
+A callback implements `on_round_end(event)` and/or `on_run_end(session,
+result)`. `RoundEvent` exposes the loss, consensus stats, and W spectral
+info as memoized lazies, so multiple callbacks share one computation and
+uninstrumented runs pay nothing.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+from repro.api.session import RoundEvent, RunResult, Session
+
+
+class Callback:
+    """Base class; subclasses override either hook."""
+
+    def on_round_end(self, event: RoundEvent) -> None:
+        pass
+
+    def on_run_end(self, session: Session, result: RunResult) -> None:
+        pass
+
+
+def _due(event: RoundEvent, every: int) -> bool:
+    return every <= 1 or event.t % every == 0 or event.is_last
+
+
+@dataclass
+class ConsoleLogger(Callback):
+    """Streams per-round metrics to stdout (quickstart/train.py style)."""
+    every: int = 1
+    consensus: bool = False
+
+    def on_round_end(self, event: RoundEvent) -> None:
+        if not _due(event, self.every):
+            return
+        line = (f"  round {event.t:4d} [{event.phase}-phase] "
+                f"loss={event.loss:.4f}")
+        if self.consensus:
+            st = event.consensus()
+            line += (f" ‖C‖={st['cross_norm']:.2e}"
+                     f" Δ_A²={st['delta_a_sq']:.2e}"
+                     f" Δ_B²={st['delta_b_sq']:.2e}")
+        print(line, flush=True)
+
+
+@dataclass
+class HistoryRecorder(Callback):
+    """Records {round, loss (+consensus stats)} dicts every `every` rounds
+    — the metrics stream behind train.py --log and the benchmark
+    diagnostics."""
+    every: int = 1
+    consensus: bool = False
+    history: list = field(default_factory=list)
+
+    def on_round_end(self, event: RoundEvent) -> None:
+        if not _due(event, self.every):
+            return
+        rec = {"round": event.t, "loss": event.loss}
+        if self.consensus:
+            rec.update(event.consensus())
+        self.history.append(rec)
+
+
+@dataclass
+class CheckpointCallback(Callback):
+    """Saves the session every `every` rounds (0 = at run end only)."""
+    path: str
+    every: int = 0
+
+    def on_round_end(self, event: RoundEvent) -> None:
+        if self.every and (event.t + 1) % self.every == 0:
+            event.session.save(self.path)
+
+    def on_run_end(self, session: Session, result: RunResult) -> None:
+        session.save(self.path)

@@ -1,0 +1,152 @@
+"""`DFLConfig` — the single declarative description of a DFL experiment.
+
+One frozen dataclass captures everything the paper's protocol needs:
+model/task, federation geometry (clients, topology, p), method + switching
+interval, optimization (rounds, local steps, lr, batch), engine knobs
+(mixing lowering, donation), and seeds. A `Session` (repro.api.session)
+turns a config into a running experiment; `cache_key()` is a stable JSON
+hash used by the benchmark results cache.
+
+Seed conventions (all derivable from `seed` unless overridden):
+  base params   <- jax.random.key(init_seed)        (init_seed = seed)
+  LoRA factors  <- jax.random.key(init_seed + 1)
+  topology RNG  <- seed
+  data pipeline <- data_seed                         (data_seed = seed)
+  evaluation    <- eval_seed (classifier tasks)
+Benchmark sweeps typically pin `init_seed` while varying `seed`, so every
+seed shares one init and only data/topology randomness moves.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+from dataclasses import dataclass, field
+from typing import Mapping, Optional
+
+from repro.core.alternating import METHODS
+
+CLASSIFIER_TASKS = ("sst2", "qqp", "qnli", "mnli")
+TOPOLOGIES = ("complete", "ring", "erdos_renyi")
+MIX_IMPLS = ("planned", "per_leaf", "concat")
+FLAT_LOWERINGS = ("auto", "flat", "per_segment")
+
+_KEY_VERSION = 2   # bump when semantics of any field change
+
+
+@dataclass(frozen=True)
+class DFLConfig:
+    """Declarative DFL experiment description (validated, hashable key)."""
+
+    # -- model / task -------------------------------------------------------
+    model: str = "gemma3-1b"     # arch name (repro.configs) or "encoder"
+    task: str = "lm"             # "lm" or a classifier task (CLASSIFIER_TASKS)
+    reduced: bool = True         # reduced() arch config (CPU scale)
+    model_kw: tuple = ()         # encoder_config(**kw) overrides (dict ok)
+
+    # -- federation ---------------------------------------------------------
+    n_clients: int = 8
+    topology: str = "complete"
+    p: float = 0.2               # edge activation probability
+    method: str = "tad"
+    T: int = 0                   # switching interval; 0 = topology-aware T*
+    adaptive_T: bool = False     # online T via AdaptiveSchedule
+    adaptive_c: float = 0.35
+    adaptive_t_max: int = 15
+
+    # -- optimization -------------------------------------------------------
+    rounds: int = 40
+    local_steps: int = 4
+    batch_size: int = 4          # per-client, per-local-step
+    seq_len: int = 64            # LM task only (classifier tasks fix theirs)
+    lr: float = 1e-3
+
+    # -- engine -------------------------------------------------------------
+    mix_impl: str = "planned"
+    mix_flat_lowering: str = "auto"   # auto = flat on TPU, per-segment off
+    donate: bool = False         # donate lora/opt buffers (in-place round)
+
+    # -- seeds / data -------------------------------------------------------
+    seed: int = 0
+    data_seed: Optional[int] = None   # defaults to seed
+    init_seed: Optional[int] = None   # defaults to seed
+    feature_shift: int = 0       # per-client feature dialects (classifier)
+    eval_n: int = 384
+    eval_seed: int = 9999
+
+    def __post_init__(self):
+        if isinstance(self.model_kw, Mapping):
+            object.__setattr__(self, "model_kw",
+                               tuple(sorted(self.model_kw.items())))
+        else:
+            object.__setattr__(self, "model_kw", tuple(self.model_kw))
+        if self.data_seed is None:
+            object.__setattr__(self, "data_seed", self.seed)
+        if self.init_seed is None:
+            object.__setattr__(self, "init_seed", self.seed)
+        self._validate()
+
+    def _validate(self) -> None:
+        def check(cond, msg):
+            if not cond:
+                raise ValueError(f"DFLConfig: {msg}")
+
+        check(self.task == "lm" or self.task in CLASSIFIER_TASKS,
+              f"unknown task {self.task!r}; known: 'lm' + {CLASSIFIER_TASKS}")
+        if self.task == "lm":
+            check(self.model != "encoder",
+                  "task 'lm' needs an architecture name, not 'encoder'")
+            check(not self.model_kw,
+                  "model_kw applies to the 'encoder' classifier model only")
+        else:
+            check(self.model == "encoder",
+                  f"classifier task {self.task!r} requires model='encoder'")
+        check(self.method in METHODS,
+              f"unknown method {self.method!r}; known: {METHODS}")
+        check(self.topology in TOPOLOGIES,
+              f"unknown topology {self.topology!r}; known: {TOPOLOGIES}")
+        check(self.mix_impl in MIX_IMPLS,
+              f"unknown mix_impl {self.mix_impl!r}; known: {MIX_IMPLS}")
+        check(self.mix_flat_lowering in FLAT_LOWERINGS,
+              f"unknown mix_flat_lowering {self.mix_flat_lowering!r}; "
+              f"known: {FLAT_LOWERINGS}")
+        check(self.n_clients >= 2, "n_clients must be >= 2")
+        check(0.0 < self.p <= 1.0, "p must be in (0, 1]")
+        check(self.rounds > 0, "rounds must be positive")
+        check(self.local_steps > 0, "local_steps must be positive")
+        check(self.batch_size > 0, "batch_size must be positive")
+        check(self.T >= 0, "T must be >= 0 (0 selects T*(rho))")
+        if self.adaptive_T:
+            check(self.method in ("tad", "rolora"),
+                  "adaptive_T applies to alternating methods only")
+
+    # -- serialization ------------------------------------------------------
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["model_kw"] = dict(self.model_kw)
+        return d
+
+    @classmethod
+    def from_dict(cls, d: Mapping) -> "DFLConfig":
+        return cls(**dict(d))
+
+    def to_json(self) -> str:
+        return json.dumps(self.to_dict(), sort_keys=True)
+
+    def cache_key(self) -> str:
+        """Stable 16-hex id of the full setting (benchmark results cache)."""
+        blob = json.dumps({"v": _KEY_VERSION, **self.to_dict()},
+                          sort_keys=True)
+        return hashlib.md5(blob.encode()).hexdigest()[:16]
+
+    def replace(self, **kw) -> "DFLConfig":
+        """dataclasses.replace with seed re-derivation: when `seed`
+        changes and data_seed/init_seed were following it (equal to the
+        old seed) and are not explicitly overridden, they follow the new
+        seed instead of freezing at their old resolved values."""
+        if "seed" in kw:
+            if "data_seed" not in kw and self.data_seed == self.seed:
+                kw["data_seed"] = None
+            if "init_seed" not in kw and self.init_seed == self.seed:
+                kw["init_seed"] = None
+        return dataclasses.replace(self, **kw)

@@ -1,0 +1,31 @@
+"""API-level constructor for the compiled DFL round.
+
+`build_round` is the one place the experiment layer (Session, launchers,
+dry-run spec builders) obtains a round function; everything above
+`repro.core` routes through it so engine knobs (mixing lowering, buffer
+donation) are applied uniformly. The low-level `repro.core.make_dfl_round`
+remains exported for library users who wire loops themselves.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+from repro.core.fedtrain import make_dfl_round
+from repro.optim.adamw import AdamW
+
+
+def build_round(loss_fn: Callable, optimizer: AdamW, *,
+                local_steps: int = 1,
+                mix_impl: str = "planned",
+                mix_flat_lowering: Optional[str] = None,
+                donate: bool = False):
+    """Build round_fn(base, lora, opt_state, batch, W, masks).
+
+    mix_flat_lowering ("auto" | "flat" | "per_segment") pins the planned
+    path's fused-buffer lowering for this round function; None defers to
+    the process default (repro.core.mixing.set_flat_lowering).
+    """
+    return make_dfl_round(loss_fn, optimizer, local_steps=local_steps,
+                          mix_impl=mix_impl,
+                          mix_flat_lowering=mix_flat_lowering,
+                          donate=donate)

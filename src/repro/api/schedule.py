@@ -1,0 +1,82 @@
+"""`MaskSchedule` — one interface for static and adaptive phase schedules.
+
+The DFL round consumes only a 4-scalar `RoundMasks`; what varies across
+experiments is *how* those masks evolve over rounds. `MaskSchedule`
+unifies the two regimes behind `next_masks(t, observations)`:
+
+  * `StaticSchedule` — the paper's fixed-T calendar (`round_masks`),
+    stateless, derived purely from the round index.
+  * `AdaptiveSchedule` — the online controller (`AdaptiveTController`):
+    observes each round's realized mixing matrix W_t (passed through
+    `observations["W"]`) and re-selects T at phase boundaries.
+
+`observations` is a read-only mapping the Session fills per round —
+currently {"W": np.ndarray, "round": int, "session": Session}. Custom
+schedules (damped mixing, per-round method switching, curriculum phases)
+implement the same protocol and plug into `Session(schedule=...)`.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Mapping, Optional, Protocol, runtime_checkable
+
+import numpy as np
+
+from repro.core.adaptive import AdaptiveTController, adaptive_round_masks
+from repro.core.alternating import RoundMasks, round_masks
+
+
+@runtime_checkable
+class MaskSchedule(Protocol):
+    """Anything that maps (round index, observations) -> RoundMasks."""
+
+    def next_masks(self, t: int, observations: Mapping) -> RoundMasks:
+        ...
+
+
+@dataclass
+class StaticSchedule:
+    """The paper's fixed switching interval: masks from (method, t, T)."""
+    method: str = "tad"
+    T: int = 1
+
+    def next_masks(self, t: int, observations: Mapping) -> RoundMasks:
+        return round_masks(self.method, t, self.T)
+
+
+class AdaptiveSchedule:
+    """Online T selection (beyond-paper §VII): wraps AdaptiveTController.
+
+    estimator "spectral" feeds each observed W_t to the controller's
+    spectral rho estimator; "none" leaves the controller's rho untouched
+    (useful to drive it externally or to pin T for parity tests).
+    `t_trace` records the interval in force at every round.
+    """
+
+    def __init__(self, method: str = "tad", *, c: float = 0.35,
+                 t_max: int = 15, t_min: int = 1, ewma: float = 0.2,
+                 estimator: str = "spectral",
+                 controller: Optional[AdaptiveTController] = None):
+        if estimator not in ("spectral", "none"):
+            raise ValueError(f"unknown estimator {estimator!r}")
+        self.method = method
+        self.estimator = estimator
+        self.controller = controller if controller is not None else \
+            AdaptiveTController(c=c, t_max=t_max, t_min=t_min, ewma=ewma)
+        self.t_trace: list[int] = []
+
+    def next_masks(self, t: int, observations: Mapping) -> RoundMasks:
+        W = observations.get("W") if self.estimator == "spectral" else None
+        if W is not None:
+            self.controller.observe_mixing_matrix(np.asarray(W))
+        masks = adaptive_round_masks(self.controller, self.method)
+        self.t_trace.append(self.controller.T)
+        return masks
+
+    @property
+    def T(self) -> int:
+        return self.controller.T
+
+    @property
+    def rho_hat(self) -> float:
+        return float(np.sqrt(self.controller.rho_sq))

@@ -1,0 +1,421 @@
+"""`Session` — a running DFL experiment built from a `DFLConfig`.
+
+Owns everything the seven former hand-wired loops re-implemented: model +
+LoRA init, topology sampling, the data pipeline, the jitted DFL round
+(mesh-aware via `repro.dist` — it runs unchanged under a bound production
+mesh — with optional buffer donation), checkpoint/resume through
+`repro.checkpoint`, and a callback hook list.
+
+    cfg = DFLConfig(model="gemma3-1b", task="lm", n_clients=6, rounds=15)
+    sess = Session(cfg, callbacks=[ConsoleLogger()])
+    result = sess.run()
+
+The round loop is deliberately bare — sample W_t, ask the `MaskSchedule`
+for this round's masks, step the compiled round, notify callbacks — so a
+Session round costs the same as a hand-wired loop (BENCH_round_loop.json
+tracks the overhead). Per-round derived quantities (consensus stats, W
+spectral gap, float(loss)) are computed lazily by `RoundEvent` only when
+a callback asks, never on the hot path.
+
+Builds are cached per model/task signature, so sweeps that vary only
+seeds/topology/T (the benchmark grids) re-use one set of init params and
+one compiled round function.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Callable, Iterator, Mapping, Optional, Sequence
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.api.config import DFLConfig
+from repro.api.rounds import build_round
+from repro.api.schedule import AdaptiveSchedule, MaskSchedule, StaticSchedule
+from repro.checkpoint import load_pytree, save_pytree
+from repro.configs import get_config
+from repro.core.alternating import RoundMasks
+from repro.core.diagnostics import consensus_stats
+from repro.core.lora import build_lora_tree
+from repro.core.topology import Topology, make_topology, \
+    optimal_switching_interval
+from repro.data.synthetic import (eval_batch, federated_batches,
+                                  label_skew_partitions, lm_token_stream,
+                                  make_task)
+from repro.optim.adamw import AdamW, AdamWState
+
+
+# ---------------------------------------------------------------------------
+# round events (lazy views handed to callbacks)
+# ---------------------------------------------------------------------------
+
+class RoundEvent:
+    """One round's outcome. Derived quantities are memoized properties so
+    uninterested callbacks never pay for them (and several callbacks share
+    one computation). The event snapshots THIS round's lora tree, so a
+    deferred `consensus()` call still describes round t — though under
+    `donate=True` the buffers are consumed by the next round, so compute
+    consensus inside on_round_end there."""
+
+    def __init__(self, session: "Session", t: int, masks: RoundMasks,
+                 W: np.ndarray, metrics: Mapping, is_last: bool):
+        self.session = session
+        self.t = t
+        self.masks = masks
+        self.W = W
+        self.metrics = metrics          # jax arrays — not yet synced
+        self.lora = session.lora        # this round's state (post-mix)
+        self.is_last = is_last
+        self._loss: Optional[float] = None
+        self._consensus: Optional[dict] = None
+        self._w_gap: Optional[float] = None
+
+    @property
+    def phase(self) -> str:
+        return "A" if self.masks.update_a else "B"
+
+    @property
+    def loss(self) -> float:
+        if self._loss is None:
+            self._loss = float(self.metrics["loss"])
+        return self._loss
+
+    def consensus(self) -> dict:
+        """Consensus/theory diagnostics of THIS round's LoRA state
+        (delta_a_sq, delta_b_sq, cross_norm, cs_bound) as floats."""
+        if self._consensus is None:
+            self._consensus = {k: float(v) for k, v in
+                               consensus_stats(self.lora).items()}
+        return self._consensus
+
+    def w_gap(self) -> float:
+        """Spectral distance ||W_t - J||_2 of this round's mixing matrix."""
+        if self._w_gap is None:
+            m = self.W.shape[0]
+            J = np.ones((m, m)) / m
+            self._w_gap = float(np.linalg.norm(self.W - J, ord=2))
+        return self._w_gap
+
+
+@dataclass
+class RunResult:
+    rounds: int
+    wall_s: float
+    final_loss: float
+    T: int
+
+
+# ---------------------------------------------------------------------------
+# cached builds (model init + compiled round per model/task signature)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class _Built:
+    model_cfg: object
+    task: object                 # SyntheticTask or None for "lm"
+    base: object
+    lora0: object
+    opt: AdamW
+    round_fn: Callable
+    acc_fn: Optional[Callable]
+
+
+_BUILD_CACHE: dict = {}
+
+
+def _build_key(cfg: DFLConfig):
+    return (cfg.model, cfg.reduced, cfg.model_kw, cfg.task,
+            cfg.feature_shift, cfg.n_clients, cfg.lr, cfg.local_steps,
+            cfg.mix_impl, cfg.mix_flat_lowering, cfg.donate, cfg.init_seed)
+
+
+def _build(cfg: DFLConfig, model_cfg, loss_fn) -> _Built:
+    cacheable = model_cfg is None and loss_fn is None
+    key = _build_key(cfg)
+    if cacheable and key in _BUILD_CACHE:
+        return _BUILD_CACHE[key]
+
+    base_key = jax.random.key(cfg.init_seed)
+    lora_key = jax.random.key(cfg.init_seed + 1)
+    acc_fn = None
+    task = None
+
+    if cfg.task == "lm":
+        from repro.models import transformer as tf
+        mc = model_cfg
+        if mc is None:
+            mc = get_config(cfg.model)
+            if cfg.reduced:
+                mc = mc.reduced()
+        base = tf.init_params(base_key, mc)
+        if loss_fn is None:
+            def loss_fn(bp, lo, micro, _cfg=mc):
+                return tf.lm_loss(bp, _cfg, micro["tokens"],
+                                  micro["targets"],
+                                  frontend=micro.get("frontend"),
+                                  lora=lo)[0]
+    else:
+        from repro.models.classifier import (classifier_accuracy,
+                                             classifier_loss, encoder_config,
+                                             init_classifier)
+        mc = model_cfg if model_cfg is not None \
+            else encoder_config(**dict(cfg.model_kw))
+        # task tokens must live inside the model's embedding table
+        task = make_task(cfg.task, feature_shift=cfg.feature_shift,
+                         vocab_size=mc.vocab_size)
+        base = init_classifier(base_key, mc, n_classes=task.n_classes)
+        if loss_fn is None:
+            def loss_fn(bp, lo, micro, _cfg=mc):
+                return classifier_loss(bp, _cfg, micro["tokens"],
+                                       micro["labels"], lora=lo)
+        acc_fn = jax.jit(lambda bp, toks, labs, lo, _cfg=mc:
+                         classifier_accuracy(bp, _cfg, toks, labs, lora=lo))
+
+    lora0 = build_lora_tree(lora_key, base, mc, n_clients=cfg.n_clients)
+    opt = AdamW(lr=cfg.lr)
+    round_fn = build_round(loss_fn, opt, local_steps=cfg.local_steps,
+                           mix_impl=cfg.mix_impl,
+                           mix_flat_lowering=cfg.mix_flat_lowering,
+                           donate=cfg.donate)
+    if not cfg.donate:
+        round_fn = jax.jit(round_fn)
+
+    built = _Built(model_cfg=mc, task=task, base=base, lora0=lora0,
+                   opt=opt, round_fn=round_fn, acc_fn=acc_fn)
+    if cacheable:
+        _BUILD_CACHE[key] = built
+    return built
+
+
+def clear_build_cache() -> None:
+    _BUILD_CACHE.clear()
+
+
+# ---------------------------------------------------------------------------
+# the Session
+# ---------------------------------------------------------------------------
+
+class Session:
+    """One DFL experiment: state + the compiled round + the round loop.
+
+    Construction is cheap when an equal model/task signature was built
+    before (init params and the jitted round are cached module-wide).
+    `model_cfg` overrides the architecture with a custom ModelConfig;
+    `loss_fn(base, lora, micro) -> scalar` overrides the objective;
+    `schedule` overrides the mask schedule (default: static T from the
+    config, or `AdaptiveSchedule` when config.adaptive_T).
+    """
+
+    def __init__(self, config: DFLConfig, *, model_cfg=None,
+                 loss_fn: Optional[Callable] = None,
+                 schedule: Optional[MaskSchedule] = None,
+                 callbacks: Sequence = ()):
+        self.config = config
+        self.callbacks = list(callbacks)
+        built = _build(config, model_cfg, loss_fn)
+        self.model_cfg = built.model_cfg
+        self.task = built.task
+        self.base = built.base
+        self.opt = built.opt
+        self.round_fn = built.round_fn
+        self._acc_fn = built.acc_fn
+        self._lora0 = built.lora0
+
+        self.topology: Topology = make_topology(
+            config.topology, config.n_clients, config.p, seed=config.seed)
+        self._rho: Optional[float] = None
+        self._T: Optional[int] = config.T or None
+        self._user_schedule = schedule
+        self.schedule = schedule if schedule is not None \
+            else self._default_schedule()
+
+        self.t = 0
+        self.last_metrics: Optional[Mapping] = None
+        self.last_event: Optional[RoundEvent] = None
+        self.reset_state()
+
+    def _default_schedule(self) -> MaskSchedule:
+        cfg = self.config
+        if cfg.adaptive_T:
+            return AdaptiveSchedule(cfg.method, c=cfg.adaptive_c,
+                                    t_max=cfg.adaptive_t_max)
+        return StaticSchedule(cfg.method, self.T)
+
+    # -- state --------------------------------------------------------------
+    @property
+    def rho(self) -> float:
+        """Monte-Carlo contraction estimate of the topology (memoized)."""
+        if self._rho is None:
+            self._rho = self.topology.rho_estimate(100)
+        return self._rho
+
+    @property
+    def T(self) -> int:
+        """The static switching interval: config.T, or T*(rho) on first
+        access (lazy — adaptive/custom-schedule sessions never pay for
+        the Monte-Carlo rho estimate behind it)."""
+        if self._T is None:
+            self._T = optimal_switching_interval(self.rho)
+        return self._T
+
+    def reset_state(self) -> None:
+        """(Re)initialize lora/opt state and the data pipeline at round 0.
+        The topology RNG is NOT reset — call sites that need a bit-for-bit
+        replay construct a fresh Session instead."""
+        lora0 = self._lora0
+        if self.config.donate:
+            # donated buffers are consumed by the round — never hand the
+            # cached init tree itself to a donating round function
+            lora0 = jax.tree.map(lambda x: jnp.array(x, copy=True), lora0)
+        self.lora = lora0
+        self.opt_state: AdamWState = self.opt.init(self.lora)
+        self._batches = self._raw_batch_iter()
+        self.t = 0
+        self.last_metrics = None
+
+    # -- data ---------------------------------------------------------------
+    # raw (numpy) draws and device conversion are split so checkpoint
+    # replay can advance the data RNG without materializing device arrays
+    def _raw_batch_iter(self) -> Iterator:
+        cfg = self.config
+        if cfg.task == "lm":
+            m, ls, b, S = (cfg.n_clients, cfg.local_steps, cfg.batch_size,
+                           cfg.seq_len)
+            stream = lm_token_stream(self.model_cfg.vocab_size, b * ls, S,
+                                     n_clients=m, seed=cfg.data_seed)
+            for raw in stream:
+                yield {k: v.reshape(m, ls, b, S).swapaxes(0, 1)
+                       for k, v in raw.items()}
+        else:
+            parts = label_skew_partitions(self.task.n_classes, cfg.n_clients)
+            # effectively endless: per-round draws don't depend on the total
+            yield from federated_batches(self.task, parts, cfg.batch_size,
+                                         cfg.local_steps, rounds=1 << 62,
+                                         seed=cfg.data_seed)
+
+    def _to_device(self, raw):
+        batch = jax.tree.map(jnp.asarray, raw)
+        cfg = self.config
+        nft = getattr(self.model_cfg, "n_frontend_tokens", 0)
+        if cfg.task == "lm" and nft:
+            batch["frontend"] = jnp.zeros(
+                (cfg.local_steps, cfg.n_clients, cfg.batch_size, nft,
+                 self.model_cfg.d_model), jnp.float32)
+        return batch
+
+    # -- the round loop -----------------------------------------------------
+    def step(self) -> RoundEvent:
+        """Run exactly one round (callbacks fire, like run()) and return
+        its event."""
+        ev = self._one_round(is_last=False, notify=True, want_event=True)
+        self.last_event = ev
+        return ev
+
+    def _one_round(self, *, is_last: bool, notify: bool,
+                   want_event: bool = False) -> Optional[RoundEvent]:
+        t = self.t
+        batch = self._to_device(next(self._batches))
+        W_np = self.topology.sample()
+        masks = self.schedule.next_masks(
+            t, {"W": W_np, "round": t, "session": self})
+        self.lora, self.opt_state, metrics = self.round_fn(
+            self.base, self.lora, self.opt_state, batch,
+            jnp.asarray(W_np, jnp.float32), masks.as_array())
+        self.last_metrics = metrics
+        # t advances BEFORE callbacks fire: a checkpoint taken inside a
+        # callback resumes after the round it just observed
+        self.t = t + 1
+        ev = None
+        if want_event or (notify and self.callbacks):
+            ev = RoundEvent(self, t, masks, W_np, metrics, is_last)
+        if notify and ev is not None:
+            for cb in self.callbacks:
+                cb.on_round_end(ev)
+        return ev
+
+    def run(self, rounds: Optional[int] = None) -> RunResult:
+        """Run `rounds` (default config.rounds) rounds from the current
+        state; fires on_round_end per round and on_run_end at the end."""
+        n = self.config.rounds if rounds is None else rounds
+        t0 = time.time()
+        end = self.t + n
+        while self.t < end:
+            self._one_round(is_last=(self.t == end - 1), notify=True)
+        jax.block_until_ready(self.lora)
+        wall = time.time() - t0
+        final = float(self.last_metrics["loss"]) \
+            if self.last_metrics is not None else float("nan")
+        result = RunResult(rounds=n, wall_s=wall, final_loss=final,
+                           T=getattr(self.schedule, "T", self.T))
+        for cb in self.callbacks:
+            cb.on_run_end(self, result)
+        return result
+
+    # -- evaluation / diagnostics ------------------------------------------
+    def consensus(self) -> dict:
+        return {k: float(v) for k, v in
+                consensus_stats(self.lora).items()}
+
+    def client_lora(self, i: int):
+        return jax.tree.map(lambda x: x[..., i, :, :], self.lora)
+
+    def evaluate(self, n: Optional[int] = None,
+                 seed: Optional[int] = None) -> dict:
+        """Mean per-client accuracy on the task's balanced test draw
+        (classifier tasks; the paper's evaluation protocol)."""
+        if self.task is None:
+            raise ValueError("evaluate() is defined for classifier tasks; "
+                             "LM runs score held-out loss/perplexity at the "
+                             "call site (see examples/dfl_finetune.py)")
+        cfg = self.config
+        test = eval_batch(self.task, n if n is not None else cfg.eval_n,
+                          seed=seed if seed is not None else cfg.eval_seed)
+        toks = jnp.asarray(test["tokens"])
+        labs = jnp.asarray(test["labels"])
+        accs = [float(self._acc_fn(self.base, toks, labs,
+                                   self.client_lora(i)))
+                for i in range(cfg.n_clients)]
+        return {"acc": float(np.mean(accs)),
+                "acc_std_clients": float(np.std(accs)),
+                "per_client": accs}
+
+    # -- checkpoint / resume ------------------------------------------------
+    def save(self, path: str) -> None:
+        """Checkpoint lora + optimizer state + round counter (flat npz)."""
+        save_pytree(path, {
+            "lora": self.lora,
+            "opt": {"step": self.opt_state.step, "mu": self.opt_state.mu,
+                    "nu": self.opt_state.nu},
+            "meta": {"round": np.int64(self.t)},
+        })
+
+    def restore(self, path: str) -> int:
+        """Resume from a checkpoint: restores state AND replays the
+        topology/data/schedule RNGs up to the saved round, so a restored
+        run continues bit-for-bit where the original left off. A
+        user-supplied `schedule` object must be freshly constructed (the
+        replay advances it from its current state)."""
+        tree = load_pytree(path)
+        self.reset_state()
+        cfg = self.config
+        self.topology = make_topology(cfg.topology, cfg.n_clients, cfg.p,
+                                      seed=cfg.seed)
+        if self._user_schedule is None:
+            self.schedule = self._default_schedule()
+        saved_round = int(np.asarray(tree["meta"]["round"]))
+        for t in range(saved_round):
+            next(self._batches)          # data RNG replay (numpy only)
+            W = self.topology.sample()   # topology RNG replay
+            self.schedule.next_masks(
+                t, {"W": W, "round": t, "session": self})
+        self.lora = jax.tree.map(jnp.asarray, tree["lora"])
+        opt = tree["opt"]
+        self.opt_state = AdamWState(
+            step=jnp.asarray(opt["step"]),
+            mu=jax.tree.map(jnp.asarray, opt["mu"]),
+            nu=jax.tree.map(jnp.asarray, opt["nu"]))
+        self.t = saved_round
+        return saved_round

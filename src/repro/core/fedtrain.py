@@ -44,6 +44,7 @@ _MIX_IMPLS = {
 def make_dfl_round(loss_fn: Callable, optimizer: AdamW, *,
                    local_steps: int = 1,
                    mix_impl: str = "planned",
+                   mix_flat_lowering: Optional[str] = None,
                    donate: bool = False):
     """Build the jit-able round function.
 
@@ -58,11 +59,18 @@ def make_dfl_round(loss_fn: Callable, optimizer: AdamW, *,
     mix_impl "planned" (default) mixes through a cached MixPlan: one fused
     gossip_mix_seg sweep, one collective under GSPMD. "per_leaf" is the
     bit-for-bit oracle (at equal masks); "concat" the legacy fused variant.
+    ``mix_flat_lowering`` ("auto"/"flat"/"per_segment", None = process
+    default) pins the planned path's buffer lowering — "auto" gates the
+    flat (m, P) buffer to TPU backends (SPMD full-remat warning on the
+    chunk reshape under GSPMD; per-segment dots win off-TPU).
     With ``donate`` the returned function is jitted with the lora/opt_state
     buffers donated (in-place round at production scale) — callers must
     then treat the passed-in trees as consumed.
     """
     mix = _MIX_IMPLS[mix_impl]
+    if mix_impl == "planned":
+        mix = partial(mixing.mix_tree_planned,
+                      flat_lowering=mix_flat_lowering)
 
     def round_fn(base_params, lora, opt_state: AdamWState, batch, W, masks):
         mask_fn = _ab_mask(masks)

@@ -179,20 +179,54 @@ def get_mix_plan(lora, *, bp: int = _KERNEL_BP) -> MixPlan:
     return plan
 
 
-def _use_flat_lowering() -> bool:
-    """The single-buffer gossip_mix lowering pays two extra full-buffer
-    copies (gather into (m, P), scatter back out). Under a bound mesh that
-    buys ONE collective for the whole tree (the point of the fused step)
-    and on TPU the copies are cheap HBM sweeps; on a plain CPU backend the
-    per-leaf dots stay cache-resident and the copies dominate, so the
-    planned path keeps the W_eff-folded per-slot dots instead (measured
-    ~4x: BENCH_mixing.json)."""
-    from repro.dist import sharding as shd
-    return shd.current_mesh() is not None or jax.default_backend() == "tpu"
+_FLAT_LOWERING_MODES = ("auto", "flat", "per_segment")
+_flat_lowering_mode = "auto"
+
+
+def set_flat_lowering(mode: str) -> str:
+    """Set the process-default flat-lowering mode; returns the previous.
+
+    "flat"        — always flatten into the single (m, P) gossip_mix buffer
+    "per_segment" — always keep the plan's per-slot W_eff dots
+    "auto"        — flat on TPU backends only (default). GSPMD emits an
+                    involuntary-full-remat warning on the chunk reshape of
+                    the flat buffer (ROADMAP open item), and off-TPU the
+                    two full-buffer copies dominate the cache-resident
+                    per-slot dots (~4x, BENCH_mixing.json) — so the flat
+                    path is gated to TPU meshes by default.
+    """
+    global _flat_lowering_mode
+    if mode not in _FLAT_LOWERING_MODES:
+        raise ValueError(f"unknown flat-lowering mode {mode!r}; "
+                         f"known: {_FLAT_LOWERING_MODES}")
+    prev, _flat_lowering_mode = _flat_lowering_mode, mode
+    return prev
+
+
+def flat_lowering_mode() -> str:
+    return _flat_lowering_mode
+
+
+def use_flat_lowering(mode: Optional[str] = None) -> bool:
+    """Resolve a mode (None -> the process default) to a concrete choice."""
+    mode = mode if mode is not None else _flat_lowering_mode
+    if mode == "flat":
+        return True
+    if mode == "per_segment":
+        return False
+    if mode != "auto":
+        raise ValueError(f"unknown flat-lowering mode {mode!r}; "
+                         f"known: {_FLAT_LOWERING_MODES}")
+    return jax.default_backend() == "tpu"
+
+
+# backwards-compat alias (benchmarks/tests of earlier PRs)
+_use_flat_lowering = use_flat_lowering
 
 
 def mix_tree_planned(W: jax.Array, lora, mask_a, mask_b, *,
-                     plan: Optional[MixPlan] = None):
+                     plan: Optional[MixPlan] = None,
+                     flat_lowering: Optional[str] = None):
     """Plan-cached fused mixing (the default fast path).
 
     Masks are folded into per-segment effective mixing matrices
@@ -202,12 +236,16 @@ def mix_tree_planned(W: jax.Array, lora, mask_a, mask_b, *,
     plan's padded flat layout; otherwise each slot is a single dot with
     its segment's W_eff. Numerically equal to mix_tree for all masks and
     bit-for-bit at equal masks (W_eff reduces to W exactly).
+
+    ``flat_lowering`` pins the buffer lowering for this call ("flat" /
+    "per_segment" / "auto"); None defers to ``set_flat_lowering``'s
+    process default (auto: flat on TPU only).
     """
     plan = plan if plan is not None else get_mix_plan(lora)
     leaves = jax.tree_util.tree_leaves(lora)
     m = plan.m
 
-    if _use_flat_lowering():
+    if use_flat_lowering(flat_lowering):
         parts = [jnp.moveaxis(x, -3, 0).reshape(m, -1) for x in leaves]
         if plan.padded > plan.cols:
             parts.append(jnp.zeros((m, plan.padded - plan.cols),

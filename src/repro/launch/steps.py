@@ -19,9 +19,9 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.api.rounds import build_round
 from repro.configs.base import ModelConfig
 from repro.configs.shapes import InputShape
-from repro.core.fedtrain import make_dfl_round
 from repro.core.lora import lora_specs as lora_spec_tree
 from repro.dist import sharding as shd
 from repro.launch.mesh import client_count
@@ -111,7 +111,8 @@ def fl_geometry(mesh: Mesh, shape: InputShape,
 # ---------------------------------------------------------------------------
 
 def make_train_step(cfg: ModelConfig, *, local_steps: int = 1,
-                    lr: float = 2e-4, mix_impl: str = "planned"):
+                    lr: float = 2e-4, mix_impl: str = "planned",
+                    mix_flat_lowering: Optional[str] = None):
     opt = AdamW(lr=lr)
 
     def loss_fn(base_params, lo, micro):
@@ -119,8 +120,9 @@ def make_train_step(cfg: ModelConfig, *, local_steps: int = 1,
                           micro["targets"], frontend=micro.get("frontend"),
                           lora=lo)[0]
 
-    round_fn = make_dfl_round(loss_fn, opt, local_steps=local_steps,
-                              mix_impl=mix_impl)
+    round_fn = build_round(loss_fn, opt, local_steps=local_steps,
+                           mix_impl=mix_impl,
+                           mix_flat_lowering=mix_flat_lowering)
     return round_fn, opt
 
 
@@ -230,11 +232,13 @@ def decode_input_specs(cfg: ModelConfig, shape: InputShape, mesh: Mesh, *,
 
 def build(cfg: ModelConfig, shape: InputShape, mesh: Mesh, *,
           local_steps: int = 1, dtype=jnp.bfloat16,
-          axis_map: Optional[dict] = None, mix_impl: str = "planned"):
+          axis_map: Optional[dict] = None, mix_impl: str = "planned",
+          mix_flat_lowering: Optional[str] = None):
     """Returns (step_fn, input_specs, n_tokens, training_flag)."""
     if shape.kind == "train":
         step, _ = make_train_step(cfg, local_steps=local_steps,
-                                  mix_impl=mix_impl)
+                                  mix_impl=mix_impl,
+                                  mix_flat_lowering=mix_flat_lowering)
         specs = train_input_specs(cfg, shape, mesh,
                                   local_steps=local_steps, dtype=dtype,
                                   axis_map=axis_map)

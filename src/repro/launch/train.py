@@ -1,9 +1,10 @@
 """End-to-end DFL LoRA fine-tuning driver.
 
-Runs the paper's Algorithm 1 against any assigned architecture (reduced or
-full) on whatever devices exist. On CPU this trains a reduced config for
-real (examples/dfl_finetune.py uses it); on a pod, pass --full to train the
-full config across the production mesh.
+Arg-parsing + `repro.api.Session`: builds a `DFLConfig` from the CLI,
+runs the paper's Algorithm 1 against any assigned architecture (reduced
+or full) on whatever devices exist. On CPU this trains a reduced config
+for real; on a pod, pass --full to train the full config across the
+production mesh (the Session's round is mesh-aware via repro.dist).
 
   PYTHONPATH=src python -m repro.launch.train --arch gemma3-1b \
       --method tad --rounds 40 --interval 3 --p 0.1 --topology complete
@@ -12,23 +13,9 @@ from __future__ import annotations
 
 import argparse
 import json
-import math
 import os
-import time
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.checkpoint import save_pytree
-from repro.configs import SHAPES, get_config
-from repro.core import (build_lora_tree, consensus_stats, make_dfl_round,
-                        make_topology, optimal_switching_interval,
-                        round_masks)
-from repro.data.synthetic import lm_token_stream
-from repro.dist import sharding as shd
-from repro.models import transformer as tf
-from repro.optim import AdamW
+from repro.api import ConsoleLogger, DFLConfig, HistoryRecorder, Session
 
 
 def main() -> None:
@@ -48,6 +35,10 @@ def main() -> None:
     ap.add_argument("--topology", default="complete",
                     choices=("complete", "ring", "erdos_renyi"))
     ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--adaptive-t", action="store_true",
+                    help="online T via the spectral AdaptiveTController")
+    ap.add_argument("--mix-flat-lowering", default="auto",
+                    choices=("auto", "flat", "per_segment"))
     ap.add_argument("--full", action="store_true",
                     help="full (non-reduced) architecture config")
     ap.add_argument("--seed", type=int, default=0)
@@ -55,73 +46,46 @@ def main() -> None:
     ap.add_argument("--log", default="")
     args = ap.parse_args()
 
-    cfg = get_config(args.arch)
-    if not args.full:
-        cfg = cfg.reduced()
-    m = args.clients
+    config = DFLConfig(
+        model=args.arch, task="lm", reduced=not args.full,
+        n_clients=args.clients, topology=args.topology, p=args.p,
+        method=args.method, T=args.interval, adaptive_T=args.adaptive_t,
+        rounds=args.rounds, local_steps=args.local_steps,
+        batch_size=args.batch, seq_len=args.seq, lr=args.lr,
+        mix_flat_lowering=args.mix_flat_lowering, seed=args.seed,
+        # the Session loop rebinds lora/opt_state every round, so the
+        # round updates them in place (no per-round copy of client state)
+        donate=True,
+    )
+    history = HistoryRecorder(every=5, consensus=True)
+    # consensus on the console too: the RoundEvent memoizes the stats, so
+    # the two callbacks share one computation per due round
+    console = ConsoleLogger(every=5, consensus=True)
+    session = Session(config, callbacks=[history, console])
 
-    topo = make_topology(args.topology, m, args.p, seed=args.seed)
-    rho = topo.rho_estimate(100)
-    T = args.interval or optimal_switching_interval(rho)
-    print(f"arch={cfg.name} method={args.method} m={m} p={args.p} "
-          f"rho≈{rho:.4f} T={T}{' (T*-selected)' if not args.interval else ''}")
+    if args.adaptive_t:
+        t_desc = f"T=adaptive (from T*={session.T})"
+    else:
+        t_desc = f"T={session.T}{'' if args.interval else ' (T*-selected)'}"
+    print(f"arch={session.model_cfg.name} method={args.method} "
+          f"m={args.clients} p={args.p} rho≈{session.rho:.4f} {t_desc}")
 
-    key = jax.random.key(args.seed)
-    base = tf.init_params(key, cfg)
-    lora = build_lora_tree(jax.random.key(args.seed + 1), base, cfg,
-                           n_clients=m)
-    opt = AdamW(lr=args.lr)
-    opt_state = opt.init(lora)
-
-    def loss_fn(bp, lo, micro):
-        return tf.lm_loss(bp, cfg, micro["tokens"], micro["targets"],
-                          frontend=micro.get("frontend"), lora=lo)[0]
-
-    # donate=True: the loop rebinds lora/opt_state every round, so the
-    # round updates them in place (no per-round copy of the client state)
-    round_fn = make_dfl_round(loss_fn, opt, local_steps=args.local_steps,
-                              donate=True)
-
-    stream = lm_token_stream(cfg.vocab_size, args.batch * args.local_steps,
-                             args.seq, n_clients=m, seed=args.seed)
-    history = []
-    t_start = time.time()
-    for t in range(args.rounds):
-        raw = next(stream)
-        batch = {
-            k: jnp.asarray(v.reshape(m, args.local_steps, args.batch,
-                                     args.seq).swapaxes(0, 1))
-            for k, v in raw.items()
-        }
-        if cfg.n_frontend_tokens:
-            batch["frontend"] = jnp.zeros(
-                (args.local_steps, m, args.batch, cfg.n_frontend_tokens,
-                 cfg.d_model), jnp.float32)
-        W = jnp.asarray(topo.sample(), jnp.float32)
-        masks = round_masks(args.method, t, T).as_array()
-        lora, opt_state, metrics = round_fn(base, lora, opt_state, batch,
-                                            W, masks)
-        if t % 5 == 0 or t == args.rounds - 1:
-            stats = consensus_stats(lora)
-            rec = {"round": t, "loss": float(metrics["loss"]),
-                   "cross_norm": float(stats["cross_norm"]),
-                   "delta_a_sq": float(stats["delta_a_sq"]),
-                   "delta_b_sq": float(stats["delta_b_sq"])}
-            history.append(rec)
-            print(f"  round {t:4d} loss={rec['loss']:.4f} "
-                  f"cross={rec['cross_norm']:.3e}")
-    wall = time.time() - t_start
-    print(f"trained {args.rounds} rounds in {wall:.1f}s "
-          f"({wall / args.rounds:.2f}s/round)")
+    result = session.run()
+    print(f"trained {result.rounds} rounds in {result.wall_s:.1f}s "
+          f"({result.wall_s / result.rounds:.2f}s/round)")
 
     if args.ckpt:
-        save_pytree(args.ckpt, {"lora": lora})
+        session.save(args.ckpt)
         print(f"saved LoRA checkpoint -> {args.ckpt}")
     if args.log:
         os.makedirs(os.path.dirname(os.path.abspath(args.log)), exist_ok=True)
         with open(args.log, "w") as f:
-            json.dump({"config": vars(args), "rho": rho, "T": T,
-                       "history": history}, f, indent=1)
+            # result.T is the interval in force at run end (moves under
+            # --adaptive-t); T_initial is the pre-run static selection
+            json.dump({"config": vars(args), "dfl_config": config.to_dict(),
+                       "rho": session.rho, "T": result.T,
+                       "T_initial": session.T,
+                       "history": history.history}, f, indent=1)
 
 
 if __name__ == "__main__":
