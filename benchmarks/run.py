@@ -21,7 +21,8 @@ import time
 import traceback
 
 BENCHES = ("fig2", "table1", "fig3", "fig4", "table3", "table5",
-           "theory", "adaptive", "kernels", "roofline", "round_loop")
+           "theory", "adaptive", "kernels", "roofline", "round_loop",
+           "scenarios")
 
 
 def _headline(name: str, result) -> str:
@@ -56,6 +57,10 @@ def _headline(name: str, result) -> str:
             return f"combos_ok={ok}"
         if name == "round_loop":
             return f"session_overhead={result['overhead_pct']:+.2f}%"
+        if name == "scenarios":
+            rps = [r["rounds_per_s"] for r in result["scenarios"]]
+            return (f"n_scenarios={len(rps)},min_rps={min(rps):.0f},"
+                    f"one_compile={result['one_compiled_round']}")
     except Exception:
         pass
     return "done"
@@ -75,6 +80,9 @@ def main() -> None:
     ap.add_argument("--round-loop-json", default="BENCH_round_loop.json",
                     help="where the round_loop bench records the Session "
                          "overhead trajectory ('' disables)")
+    ap.add_argument("--scenarios-json", default="BENCH_scenarios.json",
+                    help="where the scenarios bench records per-scenario "
+                         "throughput ('' disables)")
     args = ap.parse_args()
     quick = not args.paper
     selected = [b.strip() for b in args.only.split(",") if b.strip()] \
@@ -82,14 +90,14 @@ def main() -> None:
 
     from benchmarks import (adaptive_t, fig2_acc_vs_p, fig3_tstar,
                             fig4_heatmap, kernel_micro, roofline_report,
-                            round_loop, table1_regimes, table3_weak_avg,
-                            table5_ring, theory_crossterm)
+                            round_loop, scenarios, table1_regimes,
+                            table3_weak_avg, table5_ring, theory_crossterm)
     mods = {"fig2": fig2_acc_vs_p, "table1": table1_regimes,
             "fig3": fig3_tstar, "fig4": fig4_heatmap,
             "table3": table3_weak_avg, "table5": table5_ring,
             "theory": theory_crossterm, "adaptive": adaptive_t,
             "kernels": kernel_micro, "roofline": roofline_report,
-            "round_loop": round_loop}
+            "round_loop": round_loop, "scenarios": scenarios}
 
     csv_rows = []
     json_rows = []
@@ -105,6 +113,8 @@ def main() -> None:
             kwargs["json_path"] = args.mixing_json
         if name == "round_loop" and args.round_loop_json:
             kwargs["json_path"] = args.round_loop_json
+        if name == "scenarios" and args.scenarios_json:
+            kwargs["json_path"] = args.scenarios_json
         t0 = time.time()
         try:
             result = mods[name].run(quick=quick, **kwargs)

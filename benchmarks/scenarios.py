@@ -1,0 +1,83 @@
+"""Scenario throughput: rounds/sec for every communication condition in
+`repro.scenarios.SCENARIO_MATRIX`.
+
+All scenarios share ONE compiled round (W_t is data — the config only
+changes how the (m, m) matrix is sampled), so the spread across rows
+isolates the host-side schedule cost (graph sampling, Metropolis weights,
+churn bookkeeping) on top of the fixed device round. The result goes to
+BENCH_scenarios.json as part of the repo's recorded perf trajectory.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+
+from repro.api import DFLConfig, Session
+from repro.scenarios import SCENARIO_MATRIX
+
+M = 8
+ROUNDS = 40
+MODEL_KW = dict(n_layers=1, d_model=32, n_heads=2, d_ff=64, vocab_size=256)
+
+
+def _config(sc, rounds: int) -> DFLConfig:
+    return DFLConfig(model="encoder", task="sst2", model_kw=MODEL_KW,
+                     n_clients=M, method="tad", T=3, rounds=rounds,
+                     local_steps=2, batch_size=8, lr=1e-3, seed=0,
+                     **sc.config_kw())
+
+
+def run(quick: bool = True, json_path: str | None = None) -> dict:
+    rounds = ROUNDS if quick else 3 * ROUNDS
+    reps = 3 if quick else 5
+    rows = []
+    round_fns = set()
+    for sc in SCENARIO_MATRIX:
+        session = Session(_config(sc, rounds))
+        round_fns.add(session.round_fn)
+        session.run(5)                       # warmup: compile + caches
+        best = float("inf")
+        for _ in range(reps):
+            session.reset_state()
+            t0 = time.perf_counter()
+            session.run(rounds)
+            best = min(best, time.perf_counter() - t0)
+        us = best / rounds * 1e6
+        rows.append({"scenario": sc.name, "topology": sc.topology,
+                     "schedule": sc.scenario,
+                     "us_per_round": round(us, 1),
+                     "rounds_per_s": round(1e6 / us, 1)})
+    payload = {
+        "backend": jax.default_backend(),
+        "m": M, "rounds": rounds, "reps": reps,
+        "one_compiled_round": len(round_fns) == 1,
+        "scenarios": rows,
+    }
+    print("\n=== scenario throughput (shared compiled round) ===")
+    print(f"{'scenario':>20} {'us_per_round':>14} {'rounds_per_s':>14}")
+    for r in rows:
+        print(f"{r['scenario']:>20} {r['us_per_round']:>14} "
+              f"{r['rounds_per_s']:>14}")
+    print(f"one compiled round across all scenarios: "
+          f"{payload['one_compiled_round']}")
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(payload, f, indent=1)
+        print(f"wrote {json_path}")
+    return payload
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--paper", action="store_true",
+                    help="longer runs, more repetitions")
+    ap.add_argument("--json", default="BENCH_scenarios.json")
+    args = ap.parse_args()
+    run(quick=not args.paper, json_path=args.json or None)
+
+
+if __name__ == "__main__":
+    main()

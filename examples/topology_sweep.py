@@ -3,17 +3,28 @@
 Trains TAD-LoRA and RoLoRA classifiers across p ∈ {0.5, 0.1, 0.02} and
 reports final accuracy + consensus diagnostics — TAD's advantage appears
 as p shrinks (Fig. 2), and the cross-term grows as communication weakens
-(Prop. A.5).
+(Prop. A.5). `--graphs` sweeps the underlying graph family as well
+(`repro.core.topology.GRAPH_FAMILIES`: complete, ring, erdos_renyi,
+exponential, torus, small_world) — the spectral ladder λ2(L) orders how
+fast each family degrades.
 
   PYTHONPATH=src python examples/topology_sweep.py [--rounds 40]
+  PYTHONPATH=src python examples/topology_sweep.py \
+      --graphs complete,torus,ring --rounds 40
 """
 import argparse
 
 from repro.api import DFLConfig, Session
+from repro.core.topology import GRAPH_FAMILIES
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--rounds", type=int, default=40)
+ap.add_argument("--graphs", default="complete",
+                help="comma-separated graph families "
+                     f"(choices: {','.join(GRAPH_FAMILIES)}, or 'all')")
 args = ap.parse_args()
+graphs = list(GRAPH_FAMILIES) if args.graphs == "all" \
+    else [g.strip() for g in args.graphs.split(",") if g.strip()]
 
 base = DFLConfig(
     model="encoder", task="mnli",
@@ -22,12 +33,16 @@ base = DFLConfig(
     T=3, lr=2e-3, seed=0, data_seed=5, eval_seed=10_000,
 )
 
-print(f"{'p':>6} {'method':>8} {'acc':>8} {'‖C‖':>10} {'Δ_A²+Δ_B²':>10}")
-for p in (0.5, 0.1, 0.02):
-    for method in ("tad", "rolora"):
-        session = Session(base.replace(p=p, method=method))
-        session.run()
-        acc = session.evaluate()["acc"]
-        s = session.consensus()
-        print(f"{p:>6} {method:>8} {acc:>8.4f} {s['cross_norm']:>10.2e} "
-              f"{s['delta_a_sq'] + s['delta_b_sq']:>10.2e}")
+print(f"{'graph':>12} {'p':>6} {'method':>8} {'acc':>8} {'‖C‖':>10} "
+      f"{'Δ_A²+Δ_B²':>10}")
+for graph in graphs:
+    for p in (0.5, 0.1, 0.02):
+        for method in ("tad", "rolora"):
+            session = Session(base.replace(topology=graph, p=p,
+                                           method=method))
+            session.run()
+            acc = session.evaluate()["acc"]
+            s = session.consensus()
+            print(f"{graph:>12} {p:>6} {method:>8} {acc:>8.4f} "
+                  f"{s['cross_norm']:>10.2e} "
+                  f"{s['delta_a_sq'] + s['delta_b_sq']:>10.2e}")

@@ -12,10 +12,12 @@ from repro.api.config import DFLConfig
 from repro.api.rounds import build_round
 from repro.api.schedule import AdaptiveSchedule, MaskSchedule, StaticSchedule
 from repro.api.session import RoundEvent, RunResult, Session
+from repro.scenarios import TopologySchedule, schedule_from_config
 
 __all__ = [
     "DFLConfig", "Session", "RunResult", "RoundEvent",
     "MaskSchedule", "StaticSchedule", "AdaptiveSchedule",
+    "TopologySchedule", "schedule_from_config",
     "Callback", "ConsoleLogger", "HistoryRecorder", "CheckpointCallback",
     "build_round",
 ]

@@ -1,9 +1,10 @@
 """`DFLConfig` — the single declarative description of a DFL experiment.
 
 One frozen dataclass captures everything the paper's protocol needs:
-model/task, federation geometry (clients, topology, p), method + switching
-interval, optimization (rounds, local steps, lr, batch), engine knobs
-(mixing lowering, donation), and seeds. A `Session` (repro.api.session)
+model/task, federation geometry (clients, graph family + topology_kw,
+communication scenario + scenario_kw, p), method + switching interval,
+optimization (rounds, local steps, lr, batch), engine knobs (mixing
+lowering, donation), and seeds. A `Session` (repro.api.session)
 turns a config into a running experiment; `cache_key()` is a stable JSON
 hash used by the benchmark results cache.
 
@@ -25,13 +26,15 @@ from dataclasses import dataclass, field
 from typing import Mapping, Optional
 
 from repro.core.alternating import METHODS
+from repro.core.topology import GRAPH_FAMILIES
+from repro.scenarios.library import SCENARIOS
 
 CLASSIFIER_TASKS = ("sst2", "qqp", "qnli", "mnli")
-TOPOLOGIES = ("complete", "ring", "erdos_renyi")
+TOPOLOGIES = GRAPH_FAMILIES
 MIX_IMPLS = ("planned", "per_leaf", "concat")
 FLAT_LOWERINGS = ("auto", "flat", "per_segment")
 
-_KEY_VERSION = 2   # bump when semantics of any field change
+_KEY_VERSION = 3   # bump when semantics of any field change
 
 
 @dataclass(frozen=True)
@@ -46,8 +49,13 @@ class DFLConfig:
 
     # -- federation ---------------------------------------------------------
     n_clients: int = 8
-    topology: str = "complete"
+    topology: str = "complete"   # underlying graph family (GRAPH_FAMILIES)
+    topology_kw: tuple = ()      # graph params (er_q, ws_k/ws_beta, torus_*)
     p: float = 0.2               # edge activation probability
+    scenario: str = "gossip"     # communication condition (SCENARIOS):
+                                 # "gossip" = the paper's Lemma A.10 sampler
+    scenario_kw: tuple = ()      # schedule params (churn leave/rejoin,
+                                 # straggler drop, phase_switch knobs)
     method: str = "tad"
     T: int = 0                   # switching interval; 0 = topology-aware T*
     adaptive_T: bool = False     # online T via AdaptiveSchedule
@@ -75,11 +83,12 @@ class DFLConfig:
     eval_seed: int = 9999
 
     def __post_init__(self):
-        if isinstance(self.model_kw, Mapping):
-            object.__setattr__(self, "model_kw",
-                               tuple(sorted(self.model_kw.items())))
-        else:
-            object.__setattr__(self, "model_kw", tuple(self.model_kw))
+        for kw_field in ("model_kw", "topology_kw", "scenario_kw"):
+            v = getattr(self, kw_field)
+            if isinstance(v, Mapping):
+                object.__setattr__(self, kw_field, tuple(sorted(v.items())))
+            else:
+                object.__setattr__(self, kw_field, tuple(v))
         if self.data_seed is None:
             object.__setattr__(self, "data_seed", self.seed)
         if self.init_seed is None:
@@ -105,6 +114,11 @@ class DFLConfig:
               f"unknown method {self.method!r}; known: {METHODS}")
         check(self.topology in TOPOLOGIES,
               f"unknown topology {self.topology!r}; known: {TOPOLOGIES}")
+        check(self.scenario in SCENARIOS,
+              f"unknown scenario {self.scenario!r}; known: {SCENARIOS}")
+        check(not (self.scenario in ("gossip", "static")
+                   and self.scenario_kw),
+              f"scenario {self.scenario!r} takes no scenario_kw")
         check(self.mix_impl in MIX_IMPLS,
               f"unknown mix_impl {self.mix_impl!r}; known: {MIX_IMPLS}")
         check(self.mix_flat_lowering in FLAT_LOWERINGS,
@@ -123,7 +137,8 @@ class DFLConfig:
     # -- serialization ------------------------------------------------------
     def to_dict(self) -> dict:
         d = dataclasses.asdict(self)
-        d["model_kw"] = dict(self.model_kw)
+        for kw_field in ("model_kw", "topology_kw", "scenario_kw"):
+            d[kw_field] = dict(getattr(self, kw_field))
         return d
 
     @classmethod

@@ -46,6 +46,8 @@ from repro.data.synthetic import (eval_batch, federated_batches,
                                   label_skew_partitions, lm_token_stream,
                                   make_task)
 from repro.optim.adamw import AdamW, AdamWState
+from repro.scenarios.library import estimate_rho_sq, schedule_from_config
+from repro.scenarios.schedule import TopologySchedule
 
 
 # ---------------------------------------------------------------------------
@@ -206,12 +208,15 @@ class Session:
     `model_cfg` overrides the architecture with a custom ModelConfig;
     `loss_fn(base, lora, micro) -> scalar` overrides the objective;
     `schedule` overrides the mask schedule (default: static T from the
-    config, or `AdaptiveSchedule` when config.adaptive_T).
+    config, or `AdaptiveSchedule` when config.adaptive_T);
+    `topology_schedule` overrides the communication condition (default:
+    built from config.scenario via `repro.scenarios`).
     """
 
     def __init__(self, config: DFLConfig, *, model_cfg=None,
                  loss_fn: Optional[Callable] = None,
                  schedule: Optional[MaskSchedule] = None,
+                 topology_schedule: Optional[TopologySchedule] = None,
                  callbacks: Sequence = ()):
         self.config = config
         self.callbacks = list(callbacks)
@@ -224,8 +229,17 @@ class Session:
         self._acc_fn = built.acc_fn
         self._lora0 = built.lora0
 
+        # the underlying graph + legacy sampler stay exposed as
+        # `session.topology`; the round loop itself draws W_t from the
+        # TopologySchedule the config's scenario selects (the "gossip"
+        # default wraps self.topology, sharing its RNG stream)
         self.topology: Topology = make_topology(
-            config.topology, config.n_clients, config.p, seed=config.seed)
+            config.topology, config.n_clients, config.p, seed=config.seed,
+            **dict(config.topology_kw))
+        self._user_topo_schedule = topology_schedule
+        self.topo_schedule: TopologySchedule = topology_schedule \
+            if topology_schedule is not None \
+            else schedule_from_config(config, topology=self.topology)
         self._rho: Optional[float] = None
         self._T: Optional[int] = config.T or None
         self._user_schedule = schedule
@@ -247,9 +261,29 @@ class Session:
     # -- state --------------------------------------------------------------
     @property
     def rho(self) -> float:
-        """Monte-Carlo contraction estimate of the topology (memoized)."""
+        """Monte-Carlo contraction estimate of the communication condition
+        (memoized). The legacy gossip scenario keeps the per-sample
+        Topology estimator (identical T* selection to pre-scenario runs);
+        every other scenario measures a fresh replica of its schedule via
+        the time-averaged ||E[WᵀW] − J||₂ gram route. Undefined for a
+        user-supplied topology_schedule: the live schedule's RNG belongs
+        to the round loop and cannot be probed, so set T explicitly (or
+        pass a mask schedule) instead of relying on T*(rho)."""
         if self._rho is None:
-            self._rho = self.topology.rho_estimate(100)
+            if self._user_topo_schedule is not None:
+                raise ValueError(
+                    "rho/T*(rho) is undefined for a user-supplied "
+                    "topology_schedule (probing it would consume the run's "
+                    "W_t stream); set config.T explicitly or pass a mask "
+                    "schedule")
+            if self.config.scenario == "gossip":
+                self._rho = self.topology.rho_estimate(100)
+            else:
+                # probe a FRESH config-derived replica — never the live
+                # schedule, whose RNG the round loop owns (a user-supplied
+                # schedule is proxied by the config's scenario)
+                self._rho = float(np.sqrt(estimate_rho_sq(
+                    schedule_from_config(self.config), rounds=100)))
         return self._rho
 
     @property
@@ -318,7 +352,7 @@ class Session:
                    want_event: bool = False) -> Optional[RoundEvent]:
         t = self.t
         batch = self._to_device(next(self._batches))
-        W_np = self.topology.sample()
+        W_np = self.topo_schedule.next_w(t)
         masks = self.schedule.next_masks(
             t, {"W": W_np, "round": t, "session": self})
         self.lora, self.opt_state, metrics = self.round_fn(
@@ -395,20 +429,27 @@ class Session:
     def restore(self, path: str) -> int:
         """Resume from a checkpoint: restores state AND replays the
         topology/data/schedule RNGs up to the saved round, so a restored
-        run continues bit-for-bit where the original left off. A
-        user-supplied `schedule` object must be freshly constructed (the
-        replay advances it from its current state)."""
+        run continues bit-for-bit where the original left off — including
+        time-varying TopologySchedules (churn Markov state, phase
+        switches), whose per-round W_t draws are re-issued in order. A
+        user-supplied `schedule`/`topology_schedule` object must be
+        freshly constructed (the replay advances it from its current
+        state)."""
         tree = load_pytree(path)
         self.reset_state()
         cfg = self.config
         self.topology = make_topology(cfg.topology, cfg.n_clients, cfg.p,
-                                      seed=cfg.seed)
+                                      seed=cfg.seed,
+                                      **dict(cfg.topology_kw))
+        if self._user_topo_schedule is None:
+            self.topo_schedule = schedule_from_config(
+                cfg, topology=self.topology)
         if self._user_schedule is None:
             self.schedule = self._default_schedule()
         saved_round = int(np.asarray(tree["meta"]["round"]))
         for t in range(saved_round):
-            next(self._batches)          # data RNG replay (numpy only)
-            W = self.topology.sample()   # topology RNG replay
+            next(self._batches)              # data RNG replay (numpy only)
+            W = self.topo_schedule.next_w(t)  # topology RNG replay
             self.schedule.next_masks(
                 t, {"W": W, "round": t, "session": self})
         self.lora = jax.tree.map(jnp.asarray, tree["lora"])

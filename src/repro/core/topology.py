@@ -8,12 +8,16 @@ performs pairwise averaging (Lemma A.10) — giving 1−ρ ≥ c_mix·p·λ2(L).
 
 Implemented here:
   * underlying graphs: complete (paper's main setting), ring (Table V),
-    arbitrary adjacency;
+    static Erdős–Rényi, exponential/hypercube, 2-D torus, Watts–Strogatz
+    small-world — the families DeCAF / decentralized-LoRA evaluate on —
+    plus arbitrary adjacency;
   * per-round W_t sampling via sequential pairwise averaging in random order
     (exactly Lemma A.10's model, so W_t is doubly stochastic by
-    construction);
-  * spectral diagnostics: λ2(L), ρ estimation (both the exact
-    ||E[WᵀW] − J||₂ route and Monte-Carlo), effective spectral gap.
+    construction), and Metropolis–Hastings weights (symmetric doubly
+    stochastic, the scenario library's constructor);
+  * spectral diagnostics: λ2(L), ρ estimation (both the ||E[WᵀW] − J||₂
+    gram route and per-sample Monte-Carlo), effective spectral gap, and
+    the Lemma A.10 contraction lower bound 1−ρ ≥ c_mix·p·λ2(L).
 
 W_t is *data*, not code — the compiled DFL round consumes it as an input
 array, so dynamic graphs never trigger recompilation.
@@ -49,6 +53,78 @@ def erdos_renyi_graph(m: int, q: float, rng: np.random.Generator) -> np.ndarray:
     return a + a.T
 
 
+def exponential_graph(m: int) -> np.ndarray:
+    """Exponential graph: node i links to (i ± 2^k) mod m for all 2^k < m.
+    For m = 2^d this is the d-dimensional hypercube's standard surrogate in
+    decentralized SGD — O(log m) degree with λ2(L) = Θ(degree)."""
+    a = np.zeros((m, m))
+    k = 1
+    while k < m:
+        for i in range(m):
+            j = (i + k) % m
+            if j != i:
+                a[i, j] = a[j, i] = 1.0
+        k *= 2
+    return a
+
+
+def torus_dims(m: int) -> tuple[int, int]:
+    """Most-square (rows, cols) factorization of m, rows <= cols."""
+    r = int(np.sqrt(m))
+    while m % r:
+        r -= 1
+    return r, m // r
+
+
+def torus_graph(m: int, rows: int = 0, cols: int = 0) -> np.ndarray:
+    """2-D torus C_rows x C_cols (rows*cols = m). Defaults to the
+    most-square factorization; a 1 x m torus degenerates to the ring."""
+    if not rows or not cols:
+        rows, cols = torus_dims(m)
+    if rows * cols != m:
+        raise ValueError(f"torus {rows}x{cols} != m={m}")
+    a = np.zeros((m, m))
+    for r in range(rows):
+        for c in range(cols):
+            i = r * cols + c
+            for j in (((r + 1) % rows) * cols + c,
+                      r * cols + (c + 1) % cols):
+                if j != i:
+                    a[i, j] = a[j, i] = 1.0
+    return a
+
+
+def watts_strogatz_graph(m: int, k: int = 4, beta: float = 0.2,
+                         rng: Optional[np.random.Generator] = None,
+                         ) -> np.ndarray:
+    """Watts–Strogatz small world: ring lattice with k neighbors per node
+    (k/2 each side), each lattice edge rewired w.p. beta to a uniformly
+    random non-neighbor. Resamples (up to 32 draws, advancing the rng) in
+    the rare event rewiring disconnects the graph."""
+    if rng is None:
+        rng = np.random.default_rng(0)
+    k = min(k, m - 1)
+    half = max(k // 2, 1)
+    for _ in range(32):
+        a = np.zeros((m, m))
+        for i in range(m):
+            for d in range(1, half + 1):
+                a[i, (i + d) % m] = a[(i + d) % m, i] = 1.0
+        for i in range(m):
+            for d in range(1, half + 1):
+                j = (i + d) % m
+                if a[i, j] and rng.random() < beta:
+                    free = np.flatnonzero(a[i] == 0)
+                    free = free[free != i]
+                    if len(free):
+                        a[i, j] = a[j, i] = 0.0
+                        jn = int(rng.choice(free))
+                        a[i, jn] = a[jn, i] = 1.0
+        if lambda2(a) > 1e-9:            # connected
+            return a
+    return a                              # last draw (k>=2 is near-surely ok)
+
+
 def laplacian(adj: np.ndarray) -> np.ndarray:
     return np.diag(adj.sum(1)) - adj
 
@@ -57,6 +133,44 @@ def lambda2(adj: np.ndarray) -> float:
     """Algebraic connectivity λ2(L)."""
     ev = np.linalg.eigvalsh(laplacian(adj))
     return float(ev[1]) if len(ev) > 1 else 0.0
+
+
+def metropolis_weights(adj: np.ndarray) -> np.ndarray:
+    """Metropolis–Hastings mixing matrix of a graph: W[i,j] =
+    1/(1+max(d_i,d_j)) on edges, diagonal = 1 − row sum. Symmetric, doubly
+    stochastic, non-negative for any adjacency — including graphs with
+    isolated nodes, whose rows degenerate to e_i (the identity row/col
+    "repair" the churn/straggler scenarios rely on)."""
+    a = (np.asarray(adj) > 0).astype(float)
+    np.fill_diagonal(a, 0.0)
+    deg = a.sum(1)
+    with np.errstate(divide="ignore"):
+        inv = 1.0 / (1.0 + np.maximum(deg[:, None], deg[None, :]))
+    W = a * inv
+    np.fill_diagonal(W, 1.0 - W.sum(1))
+    return W
+
+
+def rho_sq_from_samples(Ws) -> float:
+    """Mean-square contraction from W samples via the gram route:
+    ρ² = ||E[WᵀW] − J||₂ (tight for the Appendix A-A assumption
+    E||Wx − x̄||² ≤ ρ²||x − x̄||², unlike averaging per-sample norms)."""
+    Ws = list(Ws)
+    m = Ws[0].shape[0]
+    G = np.zeros((m, m))
+    for W in Ws:
+        G += W.T @ W
+    G /= len(Ws)
+    return float(np.linalg.norm(G - np.ones((m, m)) / m, ord=2))
+
+
+def lemma_a10_gap_bound(adj: np.ndarray, p: float,
+                        c_mix: float = 0.5) -> float:
+    """Lemma A.10's spectral-gap lower bound 1−ρ ≥ c_mix·p·λ2(L) for
+    edge-activation gossip on `adj` (capped at 1: the gap cannot exceed
+    1). Conformance tests check measured gaps against this with a
+    conservative empirical c_mix."""
+    return float(min(c_mix * p * lambda2(adj), 1.0))
 
 
 # ---------------------------------------------------------------------------
@@ -132,16 +246,35 @@ class Topology:
         return 1.0 - self.rho_estimate(n_samples)
 
 
-def make_topology(kind: str, m: int, p: float, seed: int = 0,
-                  er_q: float = 0.5) -> Topology:
+GRAPH_FAMILIES = ("complete", "ring", "erdos_renyi", "exponential",
+                  "torus", "small_world")
+
+
+def underlying_graph(kind: str, m: int, seed: int = 0, *, er_q: float = 0.5,
+                     torus_rows: int = 0, torus_cols: int = 0,
+                     ws_k: int = 4, ws_beta: float = 0.2) -> np.ndarray:
+    """Adjacency of a named graph family (the scenario library's graph
+    constructor; graph randomness derives from `seed`, not a shared rng)."""
     if kind == "complete":
-        adj = complete_graph(m)
-    elif kind == "ring":
-        adj = ring_graph(m)
-    elif kind == "erdos_renyi":
-        adj = erdos_renyi_graph(m, er_q, np.random.default_rng(seed + 777))
-    else:
-        raise ValueError(kind)
+        return complete_graph(m)
+    if kind == "ring":
+        return ring_graph(m)
+    if kind == "erdos_renyi":
+        return erdos_renyi_graph(m, er_q, np.random.default_rng(seed + 777))
+    if kind == "exponential":
+        return exponential_graph(m)
+    if kind == "torus":
+        return torus_graph(m, torus_rows, torus_cols)
+    if kind == "small_world":
+        return watts_strogatz_graph(m, ws_k, ws_beta,
+                                    np.random.default_rng(seed + 777))
+    raise ValueError(f"unknown graph family {kind!r}; "
+                     f"known: {GRAPH_FAMILIES}")
+
+
+def make_topology(kind: str, m: int, p: float, seed: int = 0,
+                  er_q: float = 0.5, **graph_kw) -> Topology:
+    adj = underlying_graph(kind, m, seed, er_q=er_q, **graph_kw)
     return Topology(adj=adj, p=p, seed=seed)
 
 

@@ -1,0 +1,23 @@
+"""`repro.scenarios` — the communication-scenario library.
+
+Topology schedules (static / edge activation / churn / stragglers / phase
+switching over any `repro.core.topology` graph family) behind one
+`TopologySchedule` protocol, the named `SCENARIO_MATRIX` the conformance
+test tier and `benchmarks/scenarios.py` sweep, and the `DFLConfig` →
+schedule factory `Session` uses. W_t is always plain (m, m) data, so every
+scenario reuses one compiled round.
+"""
+from repro.scenarios.library import (SCENARIO_MATRIX, SCENARIO_NAMES,
+                                     SCENARIOS, Scenario, estimate_rho_sq,
+                                     get_scenario, schedule_from_config)
+from repro.scenarios.schedule import (ClientChurn, EdgeActivation,
+                                      GossipSchedule, PhaseSwitch,
+                                      StaticGraph, StragglerDropout,
+                                      TopologySchedule)
+
+__all__ = [
+    "TopologySchedule", "GossipSchedule", "StaticGraph", "EdgeActivation",
+    "ClientChurn", "StragglerDropout", "PhaseSwitch",
+    "Scenario", "SCENARIO_MATRIX", "SCENARIO_NAMES", "SCENARIOS",
+    "schedule_from_config", "estimate_rho_sq", "get_scenario",
+]

@@ -1,0 +1,178 @@
+"""The scenario library: named communication conditions + config wiring.
+
+A `Scenario` bundles (underlying graph family, topology schedule kind,
+activation/churn parameters) into one named object that can be (a) turned
+into `DFLConfig` field overrides (`config_kw()`), (b) built standalone as a
+`TopologySchedule` (`build()`), and (c) interrogated for the spectral
+reference quantities the theory-conformance tier checks against Lemma A.10
+(`probes()` → per-phase (adjacency, effective p, schedule factory)).
+
+`SCENARIO_MATRIX` is the canonical matrix: every entry is exercised by
+`tests/test_conformance.py` (double stochasticity/symmetry, contraction
+bound, consensus decay, single-compilation through `Session`) and timed by
+`benchmarks/scenarios.py` → BENCH_scenarios.json.
+
+`schedule_from_config(cfg)` is the `Session` hook: scenario "gossip" keeps
+the paper's Lemma A.10 pairwise sampler (bit-for-bit the pre-scenario
+behavior); every other value selects a Metropolis-based schedule. W_t stays
+*data* in all cases — switching scenarios never recompiles the round.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Mapping, Optional
+
+import numpy as np
+
+from repro.core.topology import (Topology, make_topology,
+                                 rho_sq_from_samples, underlying_graph)
+from repro.scenarios.schedule import (ClientChurn, EdgeActivation,
+                                      GossipSchedule, PhaseSwitch,
+                                      StaticGraph, StragglerDropout,
+                                      TopologySchedule)
+
+SCENARIOS = ("gossip", "static", "edge_activation", "churn", "straggler",
+             "phase_switch")
+
+# phase_switch scenario_kw defaults (second = the degraded phase)
+_PHASE_DEFAULTS = dict(switch_round=10, weak_graph="ring", weak_p=0.1)
+
+
+def _as_dict(kw) -> dict:
+    return dict(kw) if not isinstance(kw, Mapping) else dict(kw.items())
+
+
+def schedule_from_config(cfg, topology: Optional[Topology] = None,
+                         ) -> TopologySchedule:
+    """Build the TopologySchedule a `DFLConfig` describes. For the legacy
+    "gossip" scenario an existing core `Topology` may be passed so the
+    schedule shares its RNG stream (Session does this to stay bit-for-bit
+    with pre-scenario runs)."""
+    tkw = _as_dict(cfg.topology_kw)
+    skw = _as_dict(cfg.scenario_kw)
+    if cfg.scenario == "gossip":
+        topo = topology if topology is not None else make_topology(
+            cfg.topology, cfg.n_clients, cfg.p, seed=cfg.seed, **tkw)
+        return GossipSchedule(topo)
+    adj = underlying_graph(cfg.topology, cfg.n_clients, cfg.seed, **tkw)
+    try:
+        if cfg.scenario == "static":
+            return StaticGraph(adj)
+        if cfg.scenario == "edge_activation":
+            return EdgeActivation(adj, cfg.p, cfg.seed, **skw)
+        if cfg.scenario == "churn":
+            return ClientChurn(adj, cfg.p, cfg.seed, **skw)
+        if cfg.scenario == "straggler":
+            return StragglerDropout(adj, cfg.p, cfg.seed, **skw)
+        if cfg.scenario == "phase_switch":
+            kw = {**_PHASE_DEFAULTS, **skw}
+            weak_adj = underlying_graph(kw["weak_graph"], cfg.n_clients,
+                                        cfg.seed)
+            return PhaseSwitch(
+                EdgeActivation(adj, cfg.p, cfg.seed),
+                EdgeActivation(weak_adj, kw["weak_p"], cfg.seed + 1),
+                kw["switch_round"])
+    except TypeError as e:
+        raise ValueError(
+            f"bad scenario_kw for scenario {cfg.scenario!r}: {e}") from e
+    raise ValueError(f"unknown scenario {cfg.scenario!r}; "
+                     f"known: {SCENARIOS}")
+
+
+def estimate_rho_sq(schedule: TopologySchedule, rounds: int = 150,
+                    burn_in: int = 0) -> float:
+    """Time-averaged mean-square contraction ρ² = ||avg_t WᵀW − J||₂ over
+    `rounds` consecutive W_t of a (fresh) schedule. `burn_in` discards the
+    leading rounds (churn starts all-active; the stationary regime is the
+    honest reference)."""
+    Ws = [schedule.next_w(t) for t in range(burn_in + rounds)]
+    return rho_sq_from_samples(Ws[burn_in:])
+
+
+# ---------------------------------------------------------------------------
+# the scenario matrix
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class Scenario:
+    """One named communication condition of the conformance matrix."""
+    name: str
+    topology: str
+    scenario: str
+    p: float = 0.5
+    topology_kw: tuple = ()
+    scenario_kw: tuple = ()
+    # conformance knobs: rho burn-in and consensus-decay target (scenarios
+    # with offline nodes mix slower; decay over the probe horizon differs)
+    burn_in: int = 0
+    decay_target: float = 0.05
+
+    def config_kw(self) -> dict:
+        """DFLConfig field overrides selecting this scenario."""
+        return dict(topology=self.topology, scenario=self.scenario,
+                    p=self.p, topology_kw=dict(self.topology_kw),
+                    scenario_kw=dict(self.scenario_kw))
+
+    def _cfg(self, m: int, seed: int):
+        from repro.api.config import DFLConfig
+        return DFLConfig(n_clients=m, seed=seed, **self.config_kw())
+
+    def build(self, m: int, seed: int = 0) -> TopologySchedule:
+        return schedule_from_config(self._cfg(m, seed))
+
+    def probes(self, m: int, seed: int = 0):
+        """Per-phase (label, adjacency, p_eff, schedule_factory) for the
+        Lemma A.10 bound check. p_eff is the effective per-edge activation
+        probability: p scaled by the probability both endpoints participate
+        (churn: stationary active fraction; straggler: 1−drop)."""
+        tkw = _as_dict(self.topology_kw)
+        skw = _as_dict(self.scenario_kw)
+        adj = underlying_graph(self.topology, m, seed, **tkw)
+        if self.scenario == "phase_switch":
+            kw = {**_PHASE_DEFAULTS, **skw}
+            weak_adj = underlying_graph(kw["weak_graph"], m, seed)
+            return [
+                ("strong", adj, self.p,
+                 lambda: EdgeActivation(adj, self.p, seed)),
+                ("weak", weak_adj, kw["weak_p"],
+                 lambda: EdgeActivation(weak_adj, kw["weak_p"], seed + 1)),
+            ]
+        p_eff = 1.0 if self.scenario == "static" else self.p
+        if self.scenario == "churn":
+            kw = {**dict(leave=0.1, rejoin=0.5), **skw}
+            a = kw["rejoin"] / (kw["leave"] + kw["rejoin"])
+            p_eff *= a * a
+        elif self.scenario == "straggler":
+            up = 1.0 - skw.get("drop", 0.2)
+            p_eff *= up * up
+        return [("", adj, p_eff, lambda: self.build(m, seed))]
+
+
+SCENARIO_MATRIX = (
+    Scenario("complete-static", "complete", "static"),
+    Scenario("complete-gossip", "complete", "gossip", p=0.2),
+    Scenario("ring-edge", "ring", "edge_activation", p=0.5,
+             decay_target=0.1),
+    Scenario("exponential-edge", "exponential", "edge_activation", p=0.4),
+    Scenario("torus-edge", "torus", "edge_activation", p=0.4),
+    Scenario("smallworld-edge", "small_world", "edge_activation", p=0.4,
+             topology_kw=(("ws_k", 4), ("ws_beta", 0.2))),
+    Scenario("er-edge", "erdos_renyi", "edge_activation", p=0.4,
+             topology_kw=(("er_q", 0.6),)),
+    Scenario("complete-churn", "complete", "churn", p=0.3,
+             scenario_kw=(("leave", 0.15), ("rejoin", 0.5)),
+             burn_in=20),
+    Scenario("torus-straggler", "torus", "straggler", p=0.6,
+             scenario_kw=(("drop", 0.25),)),
+    Scenario("phase-strong-weak", "complete", "phase_switch", p=0.5,
+             scenario_kw=(("switch_round", 8), ("weak_p", 0.15))),
+)
+
+SCENARIO_NAMES = tuple(s.name for s in SCENARIO_MATRIX)
+
+
+def get_scenario(name: str) -> Scenario:
+    for s in SCENARIO_MATRIX:
+        if s.name == name:
+            return s
+    raise KeyError(f"unknown scenario {name!r}; known: {SCENARIO_NAMES}")

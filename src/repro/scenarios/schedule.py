@@ -1,0 +1,173 @@
+"""`TopologySchedule` — one protocol for every communication condition.
+
+Mirrors `repro.api.schedule.MaskSchedule`: the compiled DFL round consumes
+an (m, m) float W_t as *data*, so what varies across scenarios is only how
+W_t evolves over rounds. `next_w(t)` must be called with consecutive round
+indices 0, 1, 2, … — schedules may hold RNG/Markov state, and checkpoint
+resume replays them by re-calling `next_w` from a freshly constructed
+schedule (the same contract `Session.restore` applies to mask schedules).
+
+Implementations:
+  * `GossipSchedule`   — the paper's Lemma A.10 sampler (sequential pairwise
+                         averaging on activated edges), wrapping a core
+                         `Topology`; doubly stochastic, not symmetric.
+  * `StaticGraph`      — constant Metropolis W of the underlying graph.
+  * `EdgeActivation`   — per-round edge firing w.p. p, Metropolis weights on
+                         the fired subgraph (symmetric doubly stochastic).
+  * `ClientChurn`      — persistent node on/off Markov chain (leave/rejoin);
+                         offline nodes' W rows/cols collapse to identity,
+                         which preserves double stochasticity exactly.
+  * `StragglerDropout` — i.i.d. per-round node dropout, same identity-row
+                         repair.
+  * `PhaseSwitch`      — strong→weak (or any) schedule change at a fixed
+                         round boundary.
+
+All Metropolis-based schedules emit symmetric W_t (`symmetric=True`);
+`GossipSchedule` emits products of pairwise averagers (`symmetric=False`),
+still doubly stochastic by construction.
+"""
+from __future__ import annotations
+
+from typing import Protocol, runtime_checkable
+
+import numpy as np
+
+from repro.core.topology import Topology, metropolis_weights
+
+
+@runtime_checkable
+class TopologySchedule(Protocol):
+    """Anything that maps a round index to this round's mixing matrix."""
+
+    m: int
+    symmetric: bool
+
+    def next_w(self, t: int) -> np.ndarray:
+        ...
+
+
+class GossipSchedule:
+    """The legacy default: Lemma A.10 sequential pairwise averaging via a
+    core `Topology`. Wraps (and shares the RNG of) the Topology object, so
+    a Session that owns both sees the identical W_t stream the pre-scenario
+    code produced."""
+
+    symmetric = False
+
+    def __init__(self, topology: Topology):
+        self.topology = topology
+        self.m = topology.m
+
+    def next_w(self, t: int) -> np.ndarray:
+        return self.topology.sample()
+
+
+class StaticGraph:
+    """Constant W: the Metropolis weights of the underlying graph."""
+
+    symmetric = True
+
+    def __init__(self, adj: np.ndarray, **_ignored):
+        self.adj = np.asarray(adj, float)
+        self.m = self.adj.shape[0]
+        self._W = metropolis_weights(self.adj)
+
+    def next_w(self, t: int) -> np.ndarray:
+        return self._W
+
+
+class EdgeActivation:
+    """Each edge of the underlying graph fires independently w.p. p every
+    round; W_t is the Metropolis matrix of the fired subgraph."""
+
+    symmetric = True
+
+    def __init__(self, adj: np.ndarray, p: float = 0.5, seed: int = 0):
+        self.adj = (np.asarray(adj, float) > 0).astype(float)
+        np.fill_diagonal(self.adj, 0.0)
+        self.m = self.adj.shape[0]
+        self.p = p
+        self._rng = np.random.default_rng(seed)
+        iu = np.triu_indices(self.m, k=1)
+        keep = self.adj[iu] > 0
+        self._edges = (iu[0][keep], iu[1][keep])
+
+    def _fired_adj(self) -> np.ndarray:
+        ii, jj = self._edges
+        fire = self._rng.random(len(ii)) < self.p
+        a = np.zeros((self.m, self.m))
+        a[ii[fire], jj[fire]] = 1.0
+        return a + a.T
+
+    def next_w(self, t: int) -> np.ndarray:
+        return metropolis_weights(self._fired_adj())
+
+
+class ClientChurn(EdgeActivation):
+    """Clients leave and rejoin: a per-node on/off Markov chain (P(leave) =
+    `leave`, P(rejoin) = `rejoin`, all nodes start active). Only edges whose
+    BOTH endpoints are active can fire; an offline node's W row/col is e_i
+    (it keeps its own state), which is exactly the repair that keeps W_t
+    doubly stochastic. At least `min_active` nodes are kept online by
+    reactivating lowest-index offline nodes."""
+
+    def __init__(self, adj: np.ndarray, p: float = 0.5, seed: int = 0,
+                 leave: float = 0.1, rejoin: float = 0.5,
+                 min_active: int = 2):
+        super().__init__(adj, p, seed)
+        self.leave = leave
+        self.rejoin = rejoin
+        self.min_active = min(min_active, self.m)
+        self.active = np.ones(self.m, bool)
+
+    def _step_membership(self) -> None:
+        u = self._rng.random(self.m)
+        flip_off = self.active & (u < self.leave)
+        flip_on = ~self.active & (u < self.rejoin)
+        self.active = (self.active & ~flip_off) | flip_on
+        short = self.min_active - int(self.active.sum())
+        if short > 0:
+            self.active[np.flatnonzero(~self.active)[:short]] = True
+
+    def next_w(self, t: int) -> np.ndarray:
+        self._step_membership()
+        a = self._fired_adj()
+        a *= self.active[:, None] * self.active[None, :]
+        return metropolis_weights(a)
+
+
+class StragglerDropout(EdgeActivation):
+    """Each node independently straggles (skips communication) w.p. `drop`
+    every round — memoryless, unlike `ClientChurn`. Stragglers get the same
+    identity row/col repair."""
+
+    def __init__(self, adj: np.ndarray, p: float = 0.5, seed: int = 0,
+                 drop: float = 0.2):
+        super().__init__(adj, p, seed)
+        self.drop = drop
+
+    def next_w(self, t: int) -> np.ndarray:
+        up = self._rng.random(self.m) >= self.drop
+        a = self._fired_adj()
+        a *= up[:, None] * up[None, :]
+        return metropolis_weights(a)
+
+
+class PhaseSwitch:
+    """Switches between two schedules at round `switch_round` (the paper's
+    strong→weak stress: connectivity degrades mid-run). Sub-schedule RNGs
+    advance only while their phase is live, so sequential replay is exact."""
+
+    def __init__(self, first: TopologySchedule, second: TopologySchedule,
+                 switch_round: int):
+        if first.m != second.m:
+            raise ValueError("phase schedules must share m")
+        self.first = first
+        self.second = second
+        self.switch_round = switch_round
+        self.m = first.m
+        self.symmetric = first.symmetric and second.symmetric
+
+    def next_w(self, t: int) -> np.ndarray:
+        sched = self.first if t < self.switch_round else self.second
+        return sched.next_w(t)

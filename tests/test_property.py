@@ -1,11 +1,18 @@
 """Property-based tests (hypothesis) on the system's invariants."""
+import os
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-hypothesis = pytest.importorskip(
-    "hypothesis", reason="property tests need hypothesis (optional dep)")
+if os.environ.get("REPRO_REQUIRE_HYPOTHESIS"):
+    # CI sets this so a broken hypothesis install FAILS the suite instead
+    # of silently skipping the whole property tier
+    import hypothesis
+else:
+    hypothesis = pytest.importorskip(
+        "hypothesis", reason="property tests need hypothesis (optional dep)")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import mix_tree, mix_tree_concat, sample_mixing_matrix
@@ -91,6 +98,77 @@ def test_rho_decreases_with_p(seed):
     t_lo = make_topology("complete", 8, p=0.05, seed=seed)
     t_hi = make_topology("complete", 8, p=0.8, seed=seed)
     assert t_hi.rho_estimate(60) < t_lo.rho_estimate(60)
+
+
+@given(m=st.integers(3, 10), q=st.floats(0.1, 1.0), seed=st.integers(0, 99))
+@settings(**SETTINGS)
+def test_metropolis_doubly_stochastic_on_random_adjacency(m, q, seed):
+    """Metropolis weights are symmetric doubly stochastic for ANY adjacency
+    — including disconnected draws and isolated nodes (identity rows)."""
+    from repro.core.topology import erdos_renyi_graph, metropolis_weights
+    adj = erdos_renyi_graph(m, q, np.random.default_rng(seed))
+    W = metropolis_weights(adj)
+    np.testing.assert_allclose(W.sum(0), 1.0, atol=1e-12)
+    np.testing.assert_allclose(W.sum(1), 1.0, atol=1e-12)
+    np.testing.assert_allclose(W, W.T, atol=1e-12)
+    assert (W >= 0).all()
+
+
+@given(m=st.integers(3, 10), q=st.floats(0.2, 1.0), p=st.floats(0.05, 1.0),
+       kind=st.sampled_from(["edge_activation", "churn", "straggler"]),
+       seed=st.integers(0, 99))
+@settings(**SETTINGS)
+def test_scenario_schedules_doubly_stochastic_on_random_adjacency(
+        m, q, p, kind, seed):
+    """Every W_t a scenario schedule emits over a random underlying graph
+    is doubly stochastic — the invariant the convergence theory needs, and
+    what the churn/straggler identity-row repair must preserve."""
+    from repro.core.topology import erdos_renyi_graph
+    from repro.scenarios import ClientChurn, EdgeActivation, StragglerDropout
+    adj = erdos_renyi_graph(m, q, np.random.default_rng(seed))
+    sched = {"edge_activation": lambda: EdgeActivation(adj, p, seed),
+             "churn": lambda: ClientChurn(adj, p, seed, leave=0.3,
+                                          rejoin=0.4),
+             "straggler": lambda: StragglerDropout(adj, p, seed, drop=0.3),
+             }[kind]()
+    for t in range(5):
+        W = sched.next_w(t)
+        np.testing.assert_allclose(W.sum(0), 1.0, atol=1e-12)
+        np.testing.assert_allclose(W.sum(1), 1.0, atol=1e-12)
+        assert (W >= 0).all()
+        np.testing.assert_allclose(W, W.T, atol=1e-12)
+
+
+@given(m=st.integers(3, 10), q=st.floats(0.2, 1.0), p=st.floats(0.05, 1.0),
+       seed=st.integers(0, 99))
+@settings(**SETTINGS)
+def test_mixing_never_expands_consensus_distance(m, q, p, seed):
+    """Doubly-stochastic mixing is non-expansive in the consensus seminorm
+    Σ_i||x_i − x̄||² — the one-step form of Lemma A.4, for any graph."""
+    from repro.core.topology import erdos_renyi_graph
+    from repro.scenarios import EdgeActivation
+    rng = np.random.default_rng(seed)
+    adj = erdos_renyi_graph(m, q, rng)
+    sched = EdgeActivation(adj, p, seed)
+    x = rng.normal(size=(m, 7))
+    d = float(np.sum((x - x.mean(0)) ** 2))
+    for t in range(4):
+        x = sched.next_w(t) @ x
+        dn = float(np.sum((x - x.mean(0)) ** 2))
+        # the 1e-24 floor absorbs float noise once consensus is numerically
+        # exact (d ~ 1e-32 after a complete-graph round)
+        assert dn <= d * (1 + 1e-9) + 1e-24
+        d = dn
+
+
+@given(m=st.integers(3, 10), q=st.floats(0.1, 1.0), p=st.floats(0.0, 1.0),
+       seed=st.integers(0, 99))
+@settings(**SETTINGS)
+def test_lemma_a10_bound_in_unit_interval(m, q, p, seed):
+    from repro.core.topology import erdos_renyi_graph, lemma_a10_gap_bound
+    adj = erdos_renyi_graph(m, q, np.random.default_rng(seed))
+    b = lemma_a10_gap_bound(adj, p)
+    assert 0.0 <= b <= 1.0
 
 
 @given(m=st.integers(2, 6), seed=st.integers(0, 30))

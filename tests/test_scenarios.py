@@ -1,0 +1,231 @@
+"""Tier-1 unit tests for the scenario library: graph families, Metropolis
+weights, schedule determinism/repair semantics, and the DFLConfig wiring.
+(The quantitative theory predicates live in tests/test_conformance.py.)"""
+import numpy as np
+import pytest
+
+from repro.api import DFLConfig, Session, schedule_from_config
+from repro.core.topology import (complete_graph, exponential_graph, lambda2,
+                                 lemma_a10_gap_bound, make_topology,
+                                 metropolis_weights, ring_graph,
+                                 rho_sq_from_samples, torus_dims, torus_graph,
+                                 underlying_graph, watts_strogatz_graph)
+from repro.scenarios import (SCENARIO_MATRIX, ClientChurn, EdgeActivation,
+                             GossipSchedule, PhaseSwitch, StaticGraph,
+                             StragglerDropout, TopologySchedule, get_scenario)
+
+M = 8
+ENC_KW = dict(n_layers=1, d_model=32, n_heads=2, d_ff=64, vocab_size=256)
+
+
+# ---------------------------------------------------------------------------
+# graph families
+# ---------------------------------------------------------------------------
+
+def test_new_graph_families_structure():
+    for fam in ("exponential", "torus", "small_world"):
+        a = underlying_graph(fam, M, seed=0)
+        assert a.shape == (M, M)
+        assert (a == a.T).all() and (np.diag(a) == 0).all()
+        assert lambda2(a) > 0, f"{fam} disconnected"
+
+
+def test_spectral_ordering_of_families():
+    """λ2: ring < torus < exponential < complete — the connectivity ladder
+    the scenario matrix spans (m=8)."""
+    l2 = {f: lambda2(underlying_graph(f, M, seed=0))
+          for f in ("ring", "torus", "exponential", "complete")}
+    assert l2["ring"] < l2["torus"] < l2["exponential"] < l2["complete"]
+
+
+def test_torus_dims_and_custom_shape():
+    assert torus_dims(8) == (2, 4)
+    assert torus_dims(9) == (3, 3)
+    assert torus_dims(7) == (1, 7)          # prime -> ring degeneration
+    a = torus_graph(12, rows=3, cols=4)
+    assert int(a.sum()) // 2 == 24          # 2*m edges on a proper torus
+    with pytest.raises(ValueError):
+        torus_graph(8, rows=3, cols=3)
+
+
+def test_exponential_graph_degree():
+    # m = 2^d: every node reaches +/-2^k -> degree 2*d - 1 dupes collapse
+    a = exponential_graph(16)
+    deg = a.sum(1)
+    assert (deg == deg[0]).all() and deg[0] >= np.log2(16)
+
+
+def test_watts_strogatz_stays_connected():
+    for seed in range(6):
+        a = watts_strogatz_graph(10, k=4, beta=0.5,
+                                 rng=np.random.default_rng(seed))
+        assert lambda2(a) > 1e-9
+
+
+def test_make_topology_new_families_and_kwargs():
+    t = make_topology("small_world", 10, 0.3, seed=1, ws_k=2, ws_beta=0.0)
+    # beta=0: pure ring lattice with k=2 -> exactly the ring graph
+    assert (t.adj == ring_graph(10)).all()
+    with pytest.raises(ValueError):
+        make_topology("moebius", 8, 0.5)
+
+
+# ---------------------------------------------------------------------------
+# metropolis weights + contraction helpers
+# ---------------------------------------------------------------------------
+
+def test_metropolis_weights_doubly_stochastic_with_isolated_nodes():
+    a = np.zeros((5, 5))
+    a[0, 1] = a[1, 0] = a[1, 2] = a[2, 1] = 1.0   # nodes 3, 4 isolated
+    W = metropolis_weights(a)
+    np.testing.assert_allclose(W.sum(0), 1.0, atol=1e-12)
+    np.testing.assert_allclose(W.sum(1), 1.0, atol=1e-12)
+    np.testing.assert_allclose(W, W.T, atol=1e-12)
+    assert (W >= 0).all()
+    assert W[3, 3] == 1.0 and W[4, 4] == 1.0      # identity-row repair
+
+
+def test_rho_sq_from_samples_identity_and_complete():
+    m = 6
+    assert rho_sq_from_samples([np.eye(m)]) == pytest.approx(1.0)
+    W = metropolis_weights(complete_graph(m))
+    assert rho_sq_from_samples([W]) < 0.2          # near-J in one hop
+
+
+def test_lemma_a10_gap_bound_capped():
+    adj = complete_graph(12)                        # lambda2 = 12
+    assert lemma_a10_gap_bound(adj, 1.0, c_mix=0.5) == 1.0
+    assert lemma_a10_gap_bound(adj, 0.01, c_mix=0.5) == \
+        pytest.approx(0.06)
+
+
+# ---------------------------------------------------------------------------
+# schedules: determinism, repair, phase switching
+# ---------------------------------------------------------------------------
+
+def test_edge_activation_deterministic_replay():
+    a = underlying_graph("torus", M, 0)
+    s1 = EdgeActivation(a, 0.4, seed=7)
+    s2 = EdgeActivation(a, 0.4, seed=7)
+    for t in range(10):
+        np.testing.assert_array_equal(s1.next_w(t), s2.next_w(t))
+    assert isinstance(s1, TopologySchedule)
+
+
+def test_client_churn_identity_rows_for_offline_nodes():
+    sched = ClientChurn(complete_graph(M), p=1.0, seed=3, leave=0.5,
+                        rejoin=0.3, min_active=2)
+    saw_offline = False
+    for t in range(30):
+        W = sched.next_w(t)
+        assert sched.active.sum() >= 2
+        for i in np.flatnonzero(~sched.active):
+            saw_offline = True
+            e = np.zeros(M)
+            e[i] = 1.0
+            np.testing.assert_array_equal(W[i], e)   # row = e_i
+            np.testing.assert_array_equal(W[:, i], e)
+    assert saw_offline                               # the chain actually churns
+
+
+def test_straggler_dropout_doubly_stochastic():
+    sched = StragglerDropout(ring_graph(M), p=0.8, seed=0, drop=0.5)
+    for t in range(20):
+        W = sched.next_w(t)
+        np.testing.assert_allclose(W.sum(0), 1.0, atol=1e-12)
+        np.testing.assert_allclose(W, W.T, atol=1e-12)
+
+
+def test_phase_switch_changes_support():
+    strong = complete_graph(M)
+    weak = ring_graph(M)
+    sched = PhaseSwitch(EdgeActivation(strong, 1.0, 0),
+                        EdgeActivation(weak, 1.0, 1), switch_round=5)
+    W_strong = sched.next_w(0)
+    assert (np.abs(W_strong[~np.eye(M, dtype=bool)]) > 0).sum() > 2 * M
+    W_weak = sched.next_w(5)
+    off = np.abs(W_weak) > 1e-12
+    np.fill_diagonal(off, False)
+    assert (off <= (weak > 0)).all()                 # support within the ring
+    with pytest.raises(ValueError):
+        PhaseSwitch(EdgeActivation(strong, 1.0, 0),
+                    EdgeActivation(ring_graph(M + 1), 1.0, 1), 5)
+
+
+# ---------------------------------------------------------------------------
+# config + Session wiring
+# ---------------------------------------------------------------------------
+
+def test_config_scenario_validation_and_roundtrip():
+    with pytest.raises(ValueError):
+        DFLConfig(scenario="chaos")
+    with pytest.raises(ValueError):
+        DFLConfig(scenario="gossip", scenario_kw={"leave": 0.5})
+    with pytest.raises(ValueError):
+        DFLConfig(topology="hyperbolic")
+    c = DFLConfig(topology="small_world", scenario="churn",
+                  topology_kw={"ws_k": 4}, scenario_kw={"leave": 0.2})
+    back = DFLConfig.from_dict(c.to_dict())
+    assert back == c and back.cache_key() == c.cache_key()
+    assert c.cache_key() != DFLConfig(topology="small_world",
+                                      scenario="straggler",
+                                      topology_kw={"ws_k": 4}).cache_key()
+
+
+def test_schedule_from_config_bad_kw_raises():
+    cfg = DFLConfig(scenario="straggler", scenario_kw={"dorp": 0.2})
+    with pytest.raises(ValueError, match="scenario_kw"):
+        schedule_from_config(cfg)
+
+
+def test_scenario_matrix_builds_valid_configs():
+    for sc in SCENARIO_MATRIX:
+        cfg = DFLConfig(n_clients=M, **sc.config_kw())
+        sched = schedule_from_config(cfg)
+        assert sched.m == M
+    assert get_scenario("ring-edge").topology == "ring"
+    with pytest.raises(KeyError):
+        get_scenario("nope")
+
+
+def test_session_gossip_schedule_shares_topology_rng():
+    """The default scenario's schedule must wrap the Session's Topology
+    object (same RNG stream as pre-scenario Sessions)."""
+    cfg = DFLConfig(model="encoder", task="sst2", model_kw=ENC_KW,
+                    n_clients=4, rounds=2, local_steps=1, batch_size=4,
+                    T=1, seed=0)
+    s = Session(cfg)
+    assert isinstance(s.topo_schedule, GossipSchedule)
+    assert s.topo_schedule.topology is s.topology
+
+
+def test_session_accepts_custom_topology_schedule():
+    cfg = DFLConfig(model="encoder", task="sst2", model_kw=ENC_KW,
+                    n_clients=4, rounds=2, local_steps=1, batch_size=4,
+                    T=1, seed=0)
+    sched = StaticGraph(ring_graph(4))
+    s = Session(cfg, topology_schedule=sched)
+    ev = s.step()
+    np.testing.assert_array_equal(ev.W, metropolis_weights(ring_graph(4)))
+
+
+def test_session_custom_schedule_with_auto_T_raises():
+    """T=0 (topology-aware T*) cannot be resolved for a user-supplied
+    topology_schedule — probing the live schedule would consume the run's
+    W_t stream — so Session must fail loudly instead of silently picking
+    T* from the config's (unrelated) default scenario."""
+    cfg = DFLConfig(model="encoder", task="sst2", model_kw=ENC_KW,
+                    n_clients=4, rounds=2, local_steps=1, batch_size=4,
+                    T=0, seed=0)
+    with pytest.raises(ValueError, match="topology_schedule"):
+        Session(cfg, topology_schedule=StaticGraph(ring_graph(4)))
+
+
+def test_session_rho_for_non_gossip_scenario():
+    cfg = DFLConfig(model="encoder", task="sst2", model_kw=ENC_KW,
+                    n_clients=6, rounds=2, local_steps=1, batch_size=4,
+                    T=0, seed=0, topology="ring",
+                    scenario="edge_activation", p=0.5)
+    s = Session(cfg)
+    assert 0.0 < s.rho < 1.0
+    assert s.T >= 1                                  # T*(rho) resolved
