@@ -22,7 +22,7 @@ import traceback
 
 BENCHES = ("fig2", "table1", "fig3", "fig4", "table3", "table5",
            "theory", "adaptive", "kernels", "roofline", "round_loop",
-           "scenarios")
+           "scenarios", "serving")
 
 
 def _headline(name: str, result) -> str:
@@ -61,6 +61,11 @@ def _headline(name: str, result) -> str:
             rps = [r["rounds_per_s"] for r in result["scenarios"]]
             return (f"n_scenarios={len(rps)},min_rps={min(rps):.0f},"
                     f"one_compile={result['one_compiled_round']}")
+        if name == "serving":
+            ovs = [r["overhead_vs_merged_pct"] for r in result["rows"]
+                   if r["mode"] == "multi"]
+            return (f"multi_vs_merged_worst={max(ovs):+.1f}%,"
+                    f"one_compile={result['one_compile']}")
     except Exception:
         pass
     return "done"
@@ -83,6 +88,9 @@ def main() -> None:
     ap.add_argument("--scenarios-json", default="BENCH_scenarios.json",
                     help="where the scenarios bench records per-scenario "
                          "throughput ('' disables)")
+    ap.add_argument("--serving-json", default="BENCH_serving.json",
+                    help="where the serving bench records multi-adapter "
+                         "decode throughput ('' disables)")
     args = ap.parse_args()
     quick = not args.paper
     selected = [b.strip() for b in args.only.split(",") if b.strip()] \
@@ -90,14 +98,15 @@ def main() -> None:
 
     from benchmarks import (adaptive_t, fig2_acc_vs_p, fig3_tstar,
                             fig4_heatmap, kernel_micro, roofline_report,
-                            round_loop, scenarios, table1_regimes,
+                            round_loop, scenarios, serving, table1_regimes,
                             table3_weak_avg, table5_ring, theory_crossterm)
     mods = {"fig2": fig2_acc_vs_p, "table1": table1_regimes,
             "fig3": fig3_tstar, "fig4": fig4_heatmap,
             "table3": table3_weak_avg, "table5": table5_ring,
             "theory": theory_crossterm, "adaptive": adaptive_t,
             "kernels": kernel_micro, "roofline": roofline_report,
-            "round_loop": round_loop, "scenarios": scenarios}
+            "round_loop": round_loop, "scenarios": scenarios,
+            "serving": serving}
 
     csv_rows = []
     json_rows = []
@@ -115,6 +124,8 @@ def main() -> None:
             kwargs["json_path"] = args.round_loop_json
         if name == "scenarios" and args.scenarios_json:
             kwargs["json_path"] = args.scenarios_json
+        if name == "serving" and args.serving_json:
+            kwargs["json_path"] = args.serving_json
         t0 = time.time()
         try:
             result = mods[name].run(quick=quick, **kwargs)

@@ -1,57 +1,68 @@
-"""Serving example: batched prefill + KV-cache decode on a reduced
-architecture, optionally with merged TAD-LoRA adapters — exercises the same
-decode path the decode_32k / long_500k dry-runs lower.
+"""Train -> checkpoint -> multi-adapter serve, end to end.
 
-  PYTHONPATH=src python examples/serve_decode.py --arch mixtral-8x22b
+A few TAD-LoRA rounds on a reduced architecture produce one adapter per
+client; `ServingSession` then serves every client's adapter (plus the
+gossip consensus) side by side from ONE compiled decode step — each decode
+slot gathers its adapter by slot id inside the kernel, so heterogeneous
+adapters cost no recompilation. `--skip-train` serves the base model only
+(pure engine benchmark; the decode path here is what the decode_32k /
+long_500k dry-runs lower at production scale).
+
+  PYTHONPATH=src python examples/serve_decode.py --arch gemma3-1b
 """
 import argparse
+import os
+import tempfile
 import time
 
-import jax
-import jax.numpy as jnp
-
-from repro.configs import get_config
-from repro.models import transformer as tf
+import numpy as np
 
 ap = argparse.ArgumentParser()
-ap.add_argument("--arch", default="mixtral-8x22b")
-ap.add_argument("--batch", type=int, default=4)
-ap.add_argument("--prompt-len", type=int, default=24)
-ap.add_argument("--gen", type=int, default=24)
+ap.add_argument("--arch", default="gemma3-1b")
+ap.add_argument("--rounds", type=int, default=2)
+ap.add_argument("--clients", type=int, default=4)
+ap.add_argument("--prompt-len", type=int, default=16)
+ap.add_argument("--gen", type=int, default=16)
+ap.add_argument("--skip-train", action="store_true")
 args = ap.parse_args()
 
-cfg = get_config(args.arch).reduced()
-key = jax.random.key(0)
-params = tf.init_params(key, cfg)
-tokens = jax.random.randint(key, (args.batch, args.prompt_len), 0,
-                            cfg.vocab_size)
-frontend = None
-if cfg.n_frontend_tokens:
-    frontend = jax.random.normal(
-        key, (args.batch, cfg.n_frontend_tokens, cfg.d_model)) * 0.02
+from repro.api import (CheckpointCallback, DFLConfig, ServingSession,
+                       Session)
 
-# prefill: last-position logits (the 32k dry-run lowers exactly this step)
+ckpt = ""
+if not args.skip_train:
+    # 1. train: a short decentralized run, one LoRA adapter per client
+    ckpt = os.path.join(tempfile.mkdtemp(), "run.npz")
+    config = DFLConfig(model=args.arch, task="lm", n_clients=args.clients,
+                       rounds=args.rounds, local_steps=1, batch_size=2,
+                       seq_len=16, T=1)
+    session = Session(config, callbacks=[CheckpointCallback(ckpt)])
+    result = session.run()
+    print(f"trained {args.rounds} rounds, final loss {result.final_loss:.3f}"
+          f" -> {ckpt}")
+
+# 2. serve: every per-client adapter + consensus from one compiled step
+serving = ServingSession(args.arch, checkpoint=ckpt,
+                         n_slots=args.clients,
+                         max_len=args.prompt_len + args.gen + 8)
+cfg = serving.model_cfg
+rng = np.random.default_rng(0)
+# every trained adapter + consensus ("base" excluded — it is the zero row);
+# --skip-train has no pool and serves the base model on every slot
+names = [n for n in serving.adapters if n != "base"] or [None]
+rids = []
+for i in range(max(args.clients, len(names))):
+    prompt = rng.integers(0, cfg.vocab_size, size=args.prompt_len)
+    rids.append(serving.submit(prompt, adapter=names[i % len(names)],
+                               max_new=args.gen))
+
 t0 = time.time()
-last_logits = tf.prefill(params, cfg, tokens, frontend=frontend)
-print(f"prefill: batch={args.batch} len={args.prompt_len} "
-      f"-> logits {last_logits.shape} in {time.time()-t0:.2f}s")
-
-# decode: replay prompt into the cache, then greedy-generate
-cache = tf.init_cache(cfg, args.batch, args.prompt_len + args.gen + 1)
-decode = jax.jit(lambda p, c, t: tf.decode_step(p, cfg, t, c))
-for t in range(args.prompt_len):
-    logits, cache = decode(params, cache, tokens[:, t:t + 1])
-
-cur = jnp.argmax(logits[:, -1, :cfg.vocab_size], -1)[:, None]
-out = [cur]
-t0 = time.time()
-for _ in range(args.gen):
-    logits, cache = decode(params, cache, cur)
-    cur = jnp.argmax(logits[:, -1, :cfg.vocab_size], -1)[:, None]
-    out.append(cur)
+serving.run()
 dt = time.time() - t0
-gen = jnp.concatenate(out, axis=1)
-print(f"decode: {args.gen} tokens x {args.batch} seqs in {dt:.2f}s "
-      f"({args.gen*args.batch/dt:.1f} tok/s, rolling-window caches "
-      f"{'on' if any(s.window for s in cfg.pattern) else 'off'})")
-print("sample tokens:", gen[0, :12].tolist())
+total = len(rids) * (args.prompt_len + args.gen)
+print(f"decoded {args.gen} tokens x {len(rids)} requests in {dt:.2f}s "
+      f"({total / dt:.1f} tok/s, {serving.compile_count} compile, "
+      f"adapters: {names})")
+for rid in rids:
+    req = serving.engine.requests[rid]
+    print(f"  [{req.adapter or 'base':>9}] {serving.result(rid)[:10]}")

@@ -3,14 +3,18 @@
 config -> Session -> callbacks: a `DFLConfig` describes the experiment,
 a `Session` owns topology sampling / the compiled mesh-aware round /
 checkpointing, a `MaskSchedule` (static or adaptive) drives the phase
-calendar, and callbacks stream metrics. `repro.core` stays the low-level
-primitive layer underneath.
+calendar, and callbacks stream metrics. The serving side mirrors it:
+an `AdapterPool` stacks the per-client adapters a run produces and a
+`ServingSession` serves them from one compiled decode step (`ServeSync`
+bridges the two for serve-while-training). `repro.core` stays the
+low-level primitive layer underneath.
 """
 from repro.api.callbacks import (Callback, CheckpointCallback, ConsoleLogger,
                                  HistoryRecorder)
 from repro.api.config import DFLConfig
 from repro.api.rounds import build_round
 from repro.api.schedule import AdaptiveSchedule, MaskSchedule, StaticSchedule
+from repro.api.serving import AdapterPool, ServeSync, ServingSession
 from repro.api.session import RoundEvent, RunResult, Session
 from repro.scenarios import TopologySchedule, schedule_from_config
 
@@ -19,5 +23,6 @@ __all__ = [
     "MaskSchedule", "StaticSchedule", "AdaptiveSchedule",
     "TopologySchedule", "schedule_from_config",
     "Callback", "ConsoleLogger", "HistoryRecorder", "CheckpointCallback",
+    "AdapterPool", "ServingSession", "ServeSync",
     "build_round",
 ]

@@ -1,0 +1,385 @@
+"""Multi-adapter TAD-LoRA serving on the `repro.api` substrate.
+
+Decentralized training ends with one LoRA adapter PER CLIENT (plus their
+gossip average); serving them should not need one engine per client. This
+module closes the train->serve loop:
+
+  `AdapterPool`     N adapters kept stacked as one pytree whose leaves carry
+                    the pool axis at position -3 — exactly the training
+                    layout, so `Session` checkpoints load without reshaping.
+                    Row 0 is always the zero ("base") adapter; updates are
+                    row-scatters, so weight hot-swap never changes a shape.
+  `ServingSession`  config -> engine: owns the base model, the pool, and a
+                    `launch.serving.ServeEngine`; requests name adapters,
+                    slots gather them by id inside one compiled decode step.
+  `ServeSync`       a Session callback that pushes the live per-client (and
+                    consensus) adapters into a pool every K rounds —
+                    serve-while-training.
+
+    cfg = DFLConfig(model="gemma3-1b", rounds=20)
+    Session(cfg, callbacks=[CheckpointCallback("run.npz")]).run()
+    serving = ServingSession(model="gemma3-1b", checkpoint="run.npz")
+    toks = serving.generate(prompt, adapter="client_3")
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.callbacks import Callback
+from repro.checkpoint import load_pytree
+from repro.configs import get_config
+from repro.core.lora import build_lora_tree, client_mean
+from repro.launch.serving import ServeEngine
+from repro.models import transformer as tf
+
+AdapterRef = Union[str, int, None]
+
+_BASE = "base"
+_CONSENSUS = "consensus"
+
+
+def _pool_axis_rows(leaf) -> int:
+    """Size of the pool/client axis (position -3) of an a/b leaf."""
+    return leaf.shape[-3]
+
+
+def _is_ab(node) -> bool:
+    return (isinstance(node, dict) and "a" in node and "b" in node
+            and not isinstance(node["a"], dict))
+
+
+class AdapterPool:
+    """A fixed-capacity bank of LoRA adapters stacked along axis -3.
+
+    ``stacked`` mirrors the training lora tree (`core.lora.build_lora_tree`
+    with ``n_clients=capacity``): plain leaves (N, d, r) and group-scanned
+    leaves (G, N, d, r). ``capacity`` is a compile-time constant — the
+    served shapes depend on it and on nothing else, so any number of
+    registered adapters (and any later `update`) reuses one compiled
+    decode step. Row 0 is the all-zero "base" adapter (ΔW = 0 — serving it
+    reproduces the raw base model bit-for-bit).
+    """
+
+    def __init__(self, stacked, ids: Sequence[str]):
+        self.stacked = jax.tree.map(jnp.asarray, stacked)
+        self._ids: list[Optional[str]] = list(ids)
+        leaves = jax.tree.leaves(self.stacked)
+        if not leaves:
+            raise ValueError("empty adapter tree")
+        cap = _pool_axis_rows(leaves[0])
+        if len(self._ids) != cap:
+            raise ValueError(f"{len(self._ids)} ids for capacity {cap}")
+        if self._ids[0] != _BASE:
+            raise ValueError("row 0 must be the reserved 'base' adapter")
+        self.capacity = cap
+
+    # -- constructors -------------------------------------------------------
+    @classmethod
+    def from_stacked(cls, lora, ids: Optional[Sequence[str]] = None, *,
+                     capacity: int = 0,
+                     consensus: bool = True) -> "AdapterPool":
+        """Build a pool from a client-stacked training lora tree
+        ((..., m, d, r) at axis -3 — a `Session.lora` or checkpoint tree).
+        Registers "base" (zeros, row 0), "client_i" for each of the m
+        client rows, and — with ``consensus`` — their mean; remaining rows
+        up to ``capacity`` (default: exactly enough) stay free for `add`.
+        """
+        lora = jax.tree.map(jnp.asarray, lora)
+        m = _pool_axis_rows(jax.tree.leaves(lora)[0])
+        if ids is None:
+            ids = [f"client_{i}" for i in range(m)]
+        ids = list(ids)
+        if len(ids) != m:
+            raise ValueError(f"{len(ids)} ids for {m} stacked adapters")
+        want = 1 + m + (1 if consensus else 0)
+        cap = max(capacity, want)
+
+        def alloc(leaf):
+            shape = list(leaf.shape)
+            shape[-3] = cap
+            buf = jnp.zeros(shape, leaf.dtype)
+            return buf.at[..., 1:1 + m, :, :].set(leaf)
+        stacked = jax.tree.map(alloc, lora)
+        names: list[Optional[str]] = [_BASE] + ids + [None] * (cap - 1 - m)
+        pool = cls(stacked, names)
+        if consensus:
+            pool.add(_CONSENSUS, client_mean(lora))
+        return pool
+
+    @classmethod
+    def from_checkpoint(cls, path: str, *, capacity: int = 0,
+                        consensus: bool = True) -> "AdapterPool":
+        """Load the per-client adapters a `Session.save` /
+        `CheckpointCallback` checkpoint holds under its "lora" key."""
+        return cls.from_stacked(load_pytree(path)["lora"],
+                                capacity=capacity, consensus=consensus)
+
+    @classmethod
+    def empty(cls, params, cfg, *, capacity: int,
+              dtype=jnp.float32) -> "AdapterPool":
+        """All-base pool shaped for ``params``/``cfg`` with ``capacity``
+        free rows — the serve-while-training starting point before the
+        first `ServeSync` push."""
+        zeros = build_lora_tree(jax.random.key(0), params, cfg,
+                                n_clients=capacity, dtype=dtype)
+        zeros = jax.tree.map(jnp.zeros_like, zeros)
+        return cls(zeros, [_BASE] + [None] * (capacity - 1))
+
+    # -- lookup -------------------------------------------------------------
+    @property
+    def ids(self) -> list[str]:
+        """Registered adapter names, pool order (excludes free rows)."""
+        return [i for i in self._ids if i is not None]
+
+    @property
+    def n_adapters(self) -> int:
+        return len(self.ids)
+
+    def row(self, adapter: AdapterRef) -> int:
+        """Resolve an adapter name (or raw row index) to its pool row;
+        ``None`` resolves to the base (zero) adapter."""
+        if adapter is None:
+            return 0
+        if isinstance(adapter, (int, np.integer)):
+            if not 0 <= adapter < self.capacity:
+                raise KeyError(f"adapter row {adapter} out of range")
+            return int(adapter)
+        try:
+            return self._ids.index(adapter)
+        except ValueError:
+            raise KeyError(f"unknown adapter {adapter!r}; "
+                           f"registered: {self.ids}") from None
+
+    def adapter(self, adapter: AdapterRef):
+        """Extract one adapter as a single (unstacked) lora tree."""
+        i = self.row(adapter)
+        return jax.tree.map(lambda s: s[..., i, :, :], self.stacked)
+
+    # -- mutation (all row-scatters: shapes never change) -------------------
+    def _set_row(self, i: int, tree) -> None:
+        self.stacked = jax.tree.map(
+            lambda s, n: s.at[..., i, :, :].set(n.astype(s.dtype)),
+            self.stacked, jax.tree.map(jnp.asarray, tree))
+
+    def _register(self, adapter_id: str) -> int:
+        """Claim the first free row for ``adapter_id`` (bookkeeping only —
+        the caller writes the weights)."""
+        if adapter_id in self._ids:
+            raise ValueError(f"adapter {adapter_id!r} already registered; "
+                             "use update()")
+        try:
+            i = self._ids.index(None)
+        except ValueError:
+            raise ValueError(
+                f"pool full ({self.capacity}); build it with a larger "
+                "capacity= (growing would recompile the decode step)"
+            ) from None
+        self._ids[i] = adapter_id
+        return i
+
+    def add(self, adapter_id: str, tree) -> int:
+        """Register a new adapter in the first free row (single lora tree,
+        no client axis). Raises when the pool is full — capacity is a
+        compile-time constant by design."""
+        i = self._register(adapter_id)
+        self._set_row(i, tree)
+        return i
+
+    def update(self, adapter: AdapterRef, tree) -> None:
+        """Hot-swap one adapter's weights (single lora tree). A pure
+        row-scatter: engines pick the new weights up on their next tick
+        with no recompilation; other rows are untouched."""
+        i = self.row(adapter)
+        if i == 0:
+            raise ValueError("row 0 is the reserved zero 'base' adapter")
+        self._set_row(i, tree)
+
+    def sync_from(self, stacked_lora, *, consensus: bool = True) -> None:
+        """Bulk hot-swap from a client-stacked training tree: client i's
+        row (registering "client_i" if new) and — with ``consensus`` —
+        their mean. One scatter per leaf for all clients (the `ServeSync`
+        fast path)."""
+        stacked_lora = jax.tree.map(jnp.asarray, stacked_lora)
+        m = _pool_axis_rows(jax.tree.leaves(stacked_lora)[0])
+        # register-only for new names; the ONE bulk scatter below carries
+        # every client's weights
+        rows = [self._ids.index(f"client_{i}") if f"client_{i}" in self._ids
+                else self._register(f"client_{i}") for i in range(m)]
+        idx = jnp.asarray(rows, jnp.int32)
+        self.stacked = jax.tree.map(
+            lambda s, src: s.at[..., idx, :, :].set(src.astype(s.dtype)),
+            self.stacked, stacked_lora)
+        mean = client_mean(stacked_lora)
+        if consensus:
+            if _CONSENSUS in self._ids:
+                self.update(_CONSENSUS, mean)
+            else:
+                self.add(_CONSENSUS, mean)
+
+    # -- the engine-facing view --------------------------------------------
+    def serving_lora(self, slot_rows) -> dict:
+        """The lora tree one engine tick feeds `decode_step`: every a/b
+        leaf gains a "slot" map ((B,), or (G, B) under the group scan so
+        lax.scan slices it per group) naming each decode slot's pool row.
+        The a/b arrays are shared with the pool (no copy)."""
+        s = jnp.asarray(slot_rows, jnp.int32)
+
+        def wrap(node):
+            if _is_ab(node):
+                a = node["a"]
+                slot = (jnp.broadcast_to(s, (a.shape[0], s.shape[0]))
+                        if a.ndim == 4 else s)
+                return {"a": node["a"], "b": node["b"], "slot": slot}
+            if isinstance(node, dict):
+                return {k: wrap(v) for k, v in node.items()}
+            if isinstance(node, list):
+                return [wrap(v) for v in node]
+            return node
+        return wrap(self.stacked)
+
+
+class ServingSession:
+    """A running multi-adapter serving deployment (the inference-side
+    sibling of `Session`).
+
+    Owns the base model, an `AdapterPool`, and a continuous-batching
+    `ServeEngine`; every decode slot independently selects the adapter its
+    request named, through one compiled decode step for the engine's whole
+    lifetime (``serving.compile_count`` stays 1).
+
+        serving = ServingSession(model="gemma3-1b", checkpoint="run.npz",
+                                 n_slots=8)
+        toks = serving.generate(prompt, adapter="client_3")
+        serving.update_adapter("client_3", new_tree)   # hot-swap
+
+    The base params are re-derived from ``init_seed`` exactly like
+    `Session` derives them (so a training checkpoint pairs with the right
+    base weights); pass ``params=`` to serve existing weights instead.
+    The pool comes from ``adapters=`` (pre-built) or ``checkpoint=`` (a
+    `Session` checkpoint); ``capacity=`` alone reserves an all-base pool
+    to `add_adapter` into later. With none of the three, the session is
+    pool-less and serves the base model with zero adapter overhead.
+    """
+
+    def __init__(self, model: str = "gemma3-1b", *, reduced: bool = True,
+                 model_cfg=None, params=None, checkpoint: str = "",
+                 adapters: Optional[AdapterPool] = None, capacity: int = 0,
+                 consensus: bool = True, n_slots: int = 4,
+                 max_len: int = 256, init_seed: int = 0):
+        self.model_cfg = model_cfg if model_cfg is not None \
+            else (get_config(model).reduced() if reduced
+                  else get_config(model))
+        self.params = params if params is not None \
+            else tf.init_params(jax.random.key(init_seed), self.model_cfg)
+        if adapters is not None:
+            self.pool = adapters
+        elif checkpoint:
+            self.pool = AdapterPool.from_checkpoint(
+                checkpoint, capacity=capacity, consensus=consensus)
+        elif capacity:
+            # no adapters yet but room reserved: an all-base pool to
+            # `add_adapter` into later (capacity is a compile-time constant)
+            self.pool = AdapterPool.empty(self.params, self.model_cfg,
+                                          capacity=capacity)
+        else:
+            # base-model-only serving: skip the pool (and the per-slot
+            # gather work) entirely
+            self.pool = None
+        self.engine = ServeEngine(self.params, self.model_cfg,
+                                  n_slots=n_slots, max_len=max_len,
+                                  adapters=self.pool)
+
+    @classmethod
+    def from_session(cls, session, *, consensus: bool = True,
+                     capacity: int = 0, **kw) -> "ServingSession":
+        """Serve a live (or finished) training `Session`: its base params
+        and a pool seeded from its current per-client adapters. Pair with
+        `ServeSync` to keep the pool tracking the run."""
+        pool = AdapterPool.from_stacked(session.lora, capacity=capacity,
+                                        consensus=consensus)
+        return cls(model_cfg=session.model_cfg, params=session.base,
+                   adapters=pool, **kw)
+
+    # -- request interface --------------------------------------------------
+    def submit(self, prompt, *, adapter: AdapterRef = None,
+               max_new: int = 32, eos_id: Optional[int] = None) -> int:
+        """Queue a prompt on the named adapter; returns the request id."""
+        return self.engine.submit(prompt, max_new=max_new, eos_id=eos_id,
+                                  adapter=adapter)
+
+    def tick(self) -> int:
+        """Advance every active slot by one token (see `ServeEngine.tick`)."""
+        return self.engine.tick()
+
+    def run(self, max_ticks: int = 10_000) -> None:
+        """Drain the queue (all submitted requests complete)."""
+        self.engine.run(max_ticks)
+
+    def result(self, rid: int) -> list[int]:
+        """Generated tokens of a (finished or in-flight) request."""
+        return self.engine.requests[rid].tokens_out
+
+    def generate(self, prompt, *, adapter: AdapterRef = None,
+                 max_new: int = 32, eos_id: Optional[int] = None
+                 ) -> list[int]:
+        """Blocking convenience: submit + drain + return the new tokens.
+        Batch-friendly throughput comes from `submit` + `run` instead."""
+        rid = self.submit(prompt, adapter=adapter, max_new=max_new,
+                          eos_id=eos_id)
+        self.run()
+        return self.result(rid)
+
+    # -- pool management ----------------------------------------------------
+    @property
+    def adapters(self) -> list[str]:
+        """Names currently served (pool order; "base" leads). Empty when
+        the session was built pool-less (base-model-only serving)."""
+        return self.pool.ids if self.pool is not None else []
+
+    @property
+    def compile_count(self) -> int:
+        """decode_step traces so far — 1 after the first tick, forever."""
+        return self.engine.compile_count
+
+    def _require_pool(self) -> AdapterPool:
+        if self.pool is None:
+            raise ValueError("this ServingSession serves the base model "
+                             "only; build it with checkpoint=/adapters=/"
+                             "capacity= to hold adapters")
+        return self.pool
+
+    def add_adapter(self, adapter_id: str, tree) -> int:
+        """Register a new adapter (single lora tree) in a free pool row."""
+        return self._require_pool().add(adapter_id, tree)
+
+    def update_adapter(self, adapter: AdapterRef, tree) -> None:
+        """Hot-swap an adapter between ticks; in-flight slots pick the new
+        weights up on the next token."""
+        self._require_pool().update(adapter, tree)
+
+
+@dataclass
+class ServeSync(Callback):
+    """Serve-while-training: every ``every`` rounds, push the training
+    session's per-client adapters (and their consensus mean) into a
+    `ServingSession`'s pool. Swaps are row-scatters between engine ticks —
+    the serving side never recompiles, and requests submitted after round t
+    decode with round-t weights.
+
+        serving = ServingSession.from_session(sess)
+        sess.callbacks.append(ServeSync(serving, every=5))
+    """
+    serving: ServingSession
+    every: int = 1
+    consensus: bool = True
+
+    def on_round_end(self, event) -> None:
+        if self.every > 1 and (event.t + 1) % self.every != 0 \
+                and not event.is_last:
+            return
+        self.serving.pool.sync_from(event.lora, consensus=self.consensus)

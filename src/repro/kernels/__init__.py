@@ -7,8 +7,8 @@ oracle off-TPU. See DESIGN.md section 7 for the TPU-adaptation rationale.
 from repro.kernels import ops, ref
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.gossip_mix import gossip_mix
-from repro.kernels.lora_matmul import lora_matmul
+from repro.kernels.lora_matmul import lora_matmul, slot_lora_matmul
 from repro.kernels.rglru_scan import rglru_scan
 
 __all__ = ["ops", "ref", "flash_attention", "gossip_mix", "lora_matmul",
-           "rglru_scan"]
+           "slot_lora_matmul", "rglru_scan"]

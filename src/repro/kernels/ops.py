@@ -16,6 +16,7 @@ from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.gossip_mix import gossip_mix as _gossip
 from repro.kernels.lora_matmul import lora_matmul as _lora_mm
+from repro.kernels.lora_matmul import slot_lora_matmul as _slot_lora_mm
 from repro.kernels.rglru_scan import rglru_scan as _rglru
 
 _FORCE: Optional[str] = None   # None | "ref" | "pallas_interpret"
@@ -40,6 +41,16 @@ def lora_matmul(x, w, a, b, scale: float = 1.0):
     if m == "ref":
         return ref.lora_matmul_ref(x, w, a, b, scale)
     return _lora_mm(x, w, a, b, scale, interpret=(m == "interpret"))
+
+
+def slot_lora_matmul(x, w, a, b, slots, scale: float = 1.0):
+    """Adapter-pool LoRA matmul: row i applies adapter ``slots[i]``.
+    x: (B, K), w: (K, N), a: (N_ad, K, r), b: (N_ad, r, N), slots: (B,)."""
+    m = _mode()
+    if m == "ref":
+        return ref.slot_lora_matmul_ref(x, w, a, b, slots, scale)
+    return _slot_lora_mm(x, w, a, b, slots, scale,
+                         interpret=(m == "interpret"))
 
 
 def flash_attention(q, k, v, *, causal: bool = True,

@@ -22,6 +22,21 @@ def lora_matmul_ref(x: jax.Array, w: jax.Array, a: jax.Array, b: jax.Array,
     return y.astype(x.dtype)
 
 
+def slot_lora_matmul_ref(x: jax.Array, w: jax.Array, a: jax.Array,
+                         b: jax.Array, slots: jax.Array,
+                         scale: float) -> jax.Array:
+    """y[i] = x[i] @ w + scale * (x[i] @ a[slots[i]]) @ b[slots[i]].
+    x: (B, K), w: (K, N), a: (N_ad, K, r), b: (N_ad, r, N), slots: (B,).
+
+    The per-row contractions mirror `models.layers.lora_linear`'s plain
+    (x @ a) @ b order so a slot-served adapter reproduces the single-adapter
+    decode path bit-for-bit at equal dtypes."""
+    y = x @ w
+    xa = jnp.einsum("bd,bdr->br", x, a[slots].astype(x.dtype))
+    return y + jnp.einsum("br,brf->bf", xa,
+                          b[slots].astype(x.dtype)) * scale
+
+
 def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
                         causal: bool = True,
                         window: Optional[int] = None) -> jax.Array:

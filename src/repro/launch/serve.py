@@ -1,8 +1,15 @@
-"""Serving driver: prefill a batch of prompts, then decode with the KV
-cache — optionally with a merged LoRA checkpoint from train.py.
+"""Serving CLI on `repro.api.ServingSession`: continuous-batching decode
+with per-request TAD-LoRA adapters from a training checkpoint.
 
   PYTHONPATH=src python -m repro.launch.serve --arch gemma3-1b \
-      --batch 4 --prompt-len 32 --gen 16 [--lora ckpt.npz]
+      --batch 4 --prompt-len 32 --gen 16 \
+      [--lora run.npz] [--merge] [--adapter consensus]
+
+Default with ``--lora``: every per-client adapter the checkpoint holds
+(plus their consensus mean) is served side-by-side from ONE compiled decode
+step — request i decodes under adapter i mod n_adapters. ``--merge`` folds
+the consensus adapter into the base weights instead (the pre-multi-adapter
+behavior); ``--adapter NAME`` pins every request to one adapter.
 """
 from __future__ import annotations
 
@@ -10,103 +17,89 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
+import numpy as np
 
+from repro.api.serving import AdapterPool, ServingSession
 from repro.checkpoint import load_pytree
-from repro.configs import get_config
 from repro.core.lora import client_mean, merge_lora
 from repro.models import transformer as tf
-
-
-def prefill_and_cache(params, cfg, tokens, frontend=None):
-    """Forward over the prompt, then build the decode cache by replaying
-    tokens through decode_step (small-scale path; production prefill fills
-    the cache from the forward pass activations)."""
-    B, S = tokens.shape
-    cache = tf.init_cache(cfg, B, max(2 * S, 64))
-    if frontend is not None:
-        cache = _fill_cross(params, cfg, cache, frontend)
-    logits = None
-    for t in range(S):
-        logits, cache = tf.decode_step(params, cfg, tokens[:, t:t + 1], cache)
-    return logits, cache
-
-
-def _fill_cross(params, cfg, cache, frontend):
-    from repro.models.transformer import _encoder_forward
-    mem = (_encoder_forward(params, cfg, frontend, None)
-           if cfg.family == "encdec" else frontend)
-    B = frontend.shape[0]
-
-    def fill(attn_p):
-        k = (mem @ attn_p["wk"]).reshape(B, -1, cfg.n_kv_heads, cfg.hd)
-        v = (mem @ attn_p["wv"]).reshape(B, -1, cfg.n_kv_heads, cfg.hd)
-        return {"ck": k, "cv": v}
-
-    for j, spec in enumerate(cfg.pattern):
-        gp = params["groups"][j]
-        target = gp.get("cross") or (gp["attn"] if spec.kind == "cross"
-                                     else None)
-        if target is None:
-            continue
-        for g in range(cfg.n_groups):
-            pg = jax.tree.map(lambda x: x[g], target)
-            cc = fill(pg)
-            cache["groups"][j]["cross"] = jax.tree.map(
-                lambda buf, new, g=g: buf.at[g].set(new),
-                cache["groups"][j]["cross"], cc)
-    return cache
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="gemma3-1b")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=4,
+                    help="number of requests (= decode slots)")
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
-    ap.add_argument("--lora", default="", help="LoRA checkpoint to merge")
+    ap.add_argument("--lora", default="",
+                    help="Session checkpoint with per-client LoRA adapters")
+    ap.add_argument("--merge", action="store_true",
+                    help="fold the consensus adapter into the base weights "
+                         "instead of multi-adapter serving")
+    ap.add_argument("--adapter", default="",
+                    help="serve every request with this one adapter")
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
-    cfg = get_config(args.arch)
-    if not args.full:
-        cfg = cfg.reduced()
     key = jax.random.key(args.seed)
-    params = tf.init_params(key, cfg)
-
-    if args.lora:
-        tree = load_pytree(args.lora)["lora"]
-        lora_tree = jax.tree.map(jnp.asarray, tree)
-        consensus = client_mean(lora_tree)
-        params = merge_lora(params, consensus, cfg)
+    pool = None
+    params = None
+    if args.lora and args.merge:
+        # legacy path: one merged model, no adapter pool
+        from repro.configs import get_config
+        cfg = get_config(args.arch)
+        if not args.full:
+            cfg = cfg.reduced()
+        params = tf.init_params(key, cfg)
+        lora_tree = jax.tree.map(jax.numpy.asarray,
+                                 load_pytree(args.lora)["lora"])
+        params = merge_lora(params, client_mean(lora_tree), cfg)
         print(f"merged consensus LoRA from {args.lora}")
+        serving = ServingSession(args.arch, reduced=not args.full,
+                                 params=params, n_slots=args.batch,
+                                 max_len=args.prompt_len + args.gen + 8,
+                                 init_seed=args.seed)
+    else:
+        if args.lora:
+            pool = AdapterPool.from_checkpoint(args.lora)
+            print(f"serving adapters from {args.lora}: {pool.ids}")
+        serving = ServingSession(args.arch, reduced=not args.full,
+                                 adapters=pool, n_slots=args.batch,
+                                 max_len=args.prompt_len + args.gen + 8,
+                                 init_seed=args.seed)
+    cfg = serving.model_cfg
 
-    tokens = jax.random.randint(key, (args.batch, args.prompt_len), 0,
-                                cfg.vocab_size)
-    frontend = None
+    rng = np.random.default_rng(args.seed)
+    prompts = rng.integers(0, cfg.vocab_size,
+                           size=(args.batch, args.prompt_len)).astype(np.int32)
     if cfg.n_frontend_tokens:
         frontend = jax.random.normal(
             key, (args.batch, cfg.n_frontend_tokens, cfg.d_model)) * 0.02
+        serving.engine.set_frontend(frontend)
+
+    # round-robin over the trained adapters + consensus ("base" excluded —
+    # it is the reserved zero row, not one of the run's models)
+    names = ([n for n in serving.adapters if n != "base"]
+             if (args.lora and not args.merge) else [None])
+    if args.adapter:
+        names = [args.adapter]
+    rids = [serving.submit(prompts[i], adapter=names[i % len(names)],
+                           max_new=args.gen)
+            for i in range(args.batch)]
 
     t0 = time.time()
-    logits, cache = prefill_and_cache(params, cfg, tokens, frontend)
-    print(f"prefill {args.prompt_len} tokens x{args.batch}: "
-          f"{time.time() - t0:.2f}s")
-
-    decode = jax.jit(lambda p, c, t: tf.decode_step(p, cfg, t, c))
-    cur = jnp.argmax(logits[:, -1, :cfg.vocab_size], -1)[:, None]
-    out = [cur]
-    t0 = time.time()
-    for _ in range(args.gen):
-        logits, cache = decode(params, cache, cur)
-        cur = jnp.argmax(logits[:, -1, :cfg.vocab_size], -1)[:, None]
-        out.append(cur)
-    gen = jnp.concatenate(out, axis=1)
+    serving.run()
     dt = time.time() - t0
+    total = args.batch * (args.prompt_len + args.gen)
     print(f"decoded {args.gen} tokens x{args.batch} in {dt:.2f}s "
-          f"({args.gen * args.batch / dt:.1f} tok/s)")
-    print("sample:", gen[0].tolist())
+          f"({total / dt:.1f} tok/s incl. prefill-by-decode, "
+          f"{serving.compile_count} compile)")
+    for rid in rids[:2]:
+        req = serving.engine.requests[rid]
+        tag = req.adapter if req.adapter is not None else "base"
+        print(f"sample [{tag}]:", serving.result(rid)[:12])
 
 
 if __name__ == "__main__":

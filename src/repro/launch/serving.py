@@ -2,16 +2,29 @@
 
 A fixed pool of ``n_slots`` decode slots shares ONE compiled decode_step.
 Every engine tick advances every active slot by exactly one token:
-slots still consuming their prompt are teacher-forced (prefill-by-decode),
-slots past it consume their previously generated token. Finished sequences
-(EOS / max_new) free their slot immediately and the next queued request is
-admitted on the following tick — no batch-wide barrier, which is the
-continuous-batching property.
+slots still consuming their prompt are teacher-forced (prefill-by-decode,
+the small-scale path — production prefill fills the cache from forward-pass
+activations and joins here for the decode phase), slots past it consume
+their previously generated token. Finished sequences (EOS / max_new) free
+their slot immediately and the next queued request is admitted on the
+following tick — no batch-wide barrier, which is the continuous-batching
+property.
 
 Per-slot position counters in the KV cache ("t": (B,), models/attention)
 make admission a pure cache-row reset: positions restart at 0 for the new
 request and the per-row validity mask hides the previous occupant's stale
 entries. No reallocation, no recompilation, ever.
+
+Multi-adapter serving: pass ``adapters`` (an object with ``row(name)`` and
+``serving_lora(slot_rows)`` — repro.api.serving.AdapterPool) and each
+request may name the TAD-LoRA adapter it wants. The engine keeps a per-slot
+adapter-row map and hands decode_step a lora tree whose leaves carry the
+whole stacked pool plus the (B,) slot map; adapter selection is DATA
+(per-row gather in kernels.ops.slot_lora_matmul), so heterogeneous
+adapters, hot-swapped weights, and retargeted slots all reuse the one
+compiled step. ``compile_count`` counts traces and must stay at 1 for the
+engine's lifetime (asserted by tests/test_serving.py and
+benchmarks/serving.py).
 
 (The decode_32k / long_500k dry-run shapes are exactly one engine tick at
 production scale.)
@@ -20,7 +33,7 @@ from __future__ import annotations
 
 import collections
 from dataclasses import dataclass, field
-from typing import Optional
+from typing import Optional, Union
 
 import jax
 import jax.numpy as jnp
@@ -32,10 +45,13 @@ from repro.models import transformer as tf
 
 @dataclass
 class Request:
+    """One generation request: prompt tokens, generation budget, and the
+    (optional) name of the pool adapter that should serve it."""
     rid: int
     prompt: np.ndarray                   # (S,) int32
     max_new: int = 32
     eos_id: Optional[int] = None
+    adapter: Union[str, int, None] = None   # pool row / name; None = base
     tokens_out: list = field(default_factory=list)
     done: bool = False
 
@@ -47,29 +63,86 @@ class _Slot:
 
 
 class ServeEngine:
+    """Continuous-batching decode engine over one compiled decode_step.
+
+    ``params`` is the base model; with ``adapters`` set, decode additionally
+    applies a per-slot TAD-LoRA adapter chosen at admission from
+    ``Request.adapter``. Completed requests stay reachable via
+    ``engine.requests[rid]`` after their slot is freed.
+    """
+
     def __init__(self, params, cfg: ModelConfig, *, n_slots: int = 4,
-                 max_len: int = 256):
+                 max_len: int = 256, adapters=None):
         self.params = params
         self.cfg = cfg
         self.n_slots = n_slots
         self.max_len = max_len
+        self.adapters = adapters
         self.cache = tf.init_cache(cfg, n_slots, max_len)
         self.slots = [_Slot() for _ in range(n_slots)]
         self.queue: collections.deque[Request] = collections.deque()
+        self.requests: dict[int, Request] = {}
         self.next_in = np.zeros((n_slots, 1), np.int32)
-        self._decode = jax.jit(lambda p, c, t: tf.decode_step(p, cfg, t, c))
+        # adapter row per slot; row 0 is the pool's base (zero) adapter
+        self.slot_rows = np.zeros((n_slots,), np.int32)
+        self.compile_count = 0           # traces of decode_step (== compiles)
+        if adapters is None:
+            def _step(p, c, t):
+                self.compile_count += 1
+                return tf.decode_step(p, cfg, t, c)
+        else:
+            def _step(p, c, t, lo):
+                self.compile_count += 1
+                return tf.decode_step(p, cfg, t, c, lora=lo)
+        self._decode = jax.jit(_step)
         self._next_rid = 0
         self.ticks = 0
 
     # ------------------------------------------------------------------
-    def submit(self, prompt, max_new: int = 32,
-               eos_id: Optional[int] = None) -> int:
+    def submit(self, prompt, max_new: int = 32, eos_id: Optional[int] = None,
+               adapter: Union[str, int, None] = None) -> int:
+        """Queue a request; returns its rid (see ``engine.requests``)."""
+        if adapter is not None and self.adapters is None:
+            raise ValueError("engine built without an AdapterPool cannot "
+                             "serve per-request adapters")
+        if self.adapters is not None:
+            self.adapters.row(adapter)   # unknown names fail HERE, not
+            #                              mid-admission with a slot held
         rid = self._next_rid
         self._next_rid += 1
-        self.queue.append(Request(rid=rid,
-                                  prompt=np.asarray(prompt, np.int32),
-                                  max_new=max_new, eos_id=eos_id))
+        req = Request(rid=rid, prompt=np.asarray(prompt, np.int32),
+                      max_new=max_new, eos_id=eos_id, adapter=adapter)
+        self.queue.append(req)
+        self.requests[rid] = req
         return rid
+
+    def set_frontend(self, frontend) -> None:
+        """Fill the cross-attention KV caches from frontend embeddings
+        (enc-dec / VLM archs), shared by every slot. Slot admission resets
+        only positions and recurrent rows, so the cross KV survives
+        request turnover; call again to change the context."""
+        cfg = self.cfg
+        mem = (tf._encoder_forward(self.params, cfg, frontend, None)
+               if cfg.family == "encdec" else frontend)
+        B = frontend.shape[0]
+
+        def fill(attn_p):
+            k = (mem @ attn_p["wk"]).reshape(B, -1, cfg.n_kv_heads, cfg.hd)
+            v = (mem @ attn_p["wv"]).reshape(B, -1, cfg.n_kv_heads, cfg.hd)
+            return {"ck": k, "cv": v}
+
+        for j, spec in enumerate(cfg.pattern):
+            gp = self.params["groups"][j]
+            target = gp.get("cross") or (gp["attn"] if spec.kind == "cross"
+                                         else None)
+            if target is None:
+                continue
+            for g in range(cfg.n_groups):
+                pg = jax.tree.map(lambda x: x[g], target)
+                cc = fill(pg)
+                self.cache["groups"][j]["cross"] = jax.tree.map(
+                    lambda buf, new, g=g: buf.at[g].set(new),
+                    self.cache["groups"][j]["cross"], cc)
 
     def _reset_slot_cache(self, slots: list[int]) -> None:
         """Zero the slots' position counters across every layer cache and
@@ -96,10 +169,17 @@ class ServeEngine:
         admitted: list[int] = []
         for i, s in enumerate(self.slots):
             if s.req is None and self.queue:
-                req = self.queue.popleft()
+                req = self.queue[0]
+                # resolve the adapter BEFORE touching any engine state so a
+                # bad name (possible via direct queue.append) cannot leave
+                # a half-admitted slot behind
+                row = (self.adapters.row(req.adapter)
+                       if self.adapters is not None else 0)
+                self.queue.popleft()
                 s.req = req
                 s.fed = 1
                 self.next_in[i, 0] = req.prompt[0]
+                self.slot_rows[i] = row
                 admitted.append(i)
         if admitted:
             self._reset_slot_cache(admitted)
@@ -111,8 +191,16 @@ class ServeEngine:
         active = [i for i, s in enumerate(self.slots) if s.req is not None]
         if not active:
             return 0
-        logits, self.cache = self._decode(self.params, self.cache,
-                                          jnp.asarray(self.next_in))
+        tokens = jnp.asarray(self.next_in)
+        if self.adapters is not None:
+            # the pool tree is re-read every tick, so pool.update()/sync
+            # between ticks hot-swaps weights with no engine involvement
+            lora = self.adapters.serving_lora(self.slot_rows)
+            logits, self.cache = self._decode(self.params, self.cache,
+                                              tokens, lora)
+        else:
+            logits, self.cache = self._decode(self.params, self.cache,
+                                              tokens)
         logits_np = np.asarray(logits[:, -1, :self.cfg.vocab_size])
         for i in active:
             s = self.slots[i]
@@ -133,6 +221,7 @@ class ServeEngine:
         return len(active)
 
     def run(self, max_ticks: int = 10_000) -> None:
+        """Tick until the queue and every slot drain."""
         for _ in range(max_ticks):
             self.tick()
             if not self.queue and all(s.req is None for s in self.slots):

@@ -7,6 +7,13 @@ LoRA convention (paper: ΔW = B·A; our storage is transposed to match the
 A LoRA leaf may carry a leading *client* axis (m, d_in, r) when the input
 carries a matching leading client axis (federated stacked evaluation) and/or
 a leading scan-group axis handled by lax.scan slicing upstream.
+
+Multi-adapter serving (repro.api.serving) passes leaves with an *adapter
+pool* axis plus a per-batch-row slot map: {"a": (N, d_in, r),
+"b": (N, r, d_out), "slot": (B,)} — row i of the activation applies adapter
+``slot[i]``, dispatched through `kernels.ops.slot_lora_matmul` (in-kernel
+gather on TPU, jnp oracle elsewhere). The slot map rides inside the lora
+dict so the whole decode stack needs no extra plumbing.
 """
 from __future__ import annotations
 
@@ -20,6 +27,8 @@ from repro.dist.sharding import logical
 
 def lora_linear(x: jax.Array, w: jax.Array, lora: Optional[dict] = None,
                 scale: float = 1.0, bias: Optional[jax.Array] = None):
+    if lora is not None and "slot" in lora:
+        return _slot_lora_linear(x, w, lora, scale, bias)
     y = jnp.einsum("...d,df->...f", x, w)
     if lora is not None:
         # compute the low-rank path in the activation dtype (bf16 on pod):
@@ -33,6 +42,30 @@ def lora_linear(x: jax.Array, w: jax.Array, lora: Optional[dict] = None,
             y = y + jnp.einsum("m...r,mrf->m...f", xa, b) * scale
         else:
             y = y + ((x @ a) @ b) * scale
+    if bias is not None:
+        y = y + bias
+    return y
+
+
+def _slot_lora_linear(x: jax.Array, w: jax.Array, lora: dict, scale: float,
+                      bias: Optional[jax.Array]):
+    """Adapter-pool application: leaf {"a": (N, d, r), "b": (N, r, f),
+    "slot": (B,)}, x: (B, S, d) or (B, d) — row i applies adapter slot[i].
+    The S == 1 decode hot path goes through the fused slot kernel; longer
+    sequences (adapter-aware prefill) take the gather+einsum route."""
+    from repro.kernels import ops   # deferred: kernels import jax.pallas
+
+    a = lora["a"].astype(x.dtype)
+    b = lora["b"].astype(x.dtype)
+    slot = lora["slot"].astype(jnp.int32)
+    if x.ndim == 2:
+        y = ops.slot_lora_matmul(x, w, a, b, slot, scale)
+    elif x.ndim == 3 and x.shape[1] == 1:
+        y = ops.slot_lora_matmul(x[:, 0], w, a, b, slot, scale)[:, None]
+    else:
+        y = jnp.einsum("...d,df->...f", x, w)
+        xa = jnp.einsum("bsd,bdr->bsr", x, a[slot])
+        y = y + jnp.einsum("bsr,brf->bsf", xa, b[slot]) * scale
     if bias is not None:
         y = y + bias
     return y

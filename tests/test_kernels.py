@@ -8,7 +8,7 @@ import pytest
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.gossip_mix import gossip_mix
-from repro.kernels.lora_matmul import lora_matmul
+from repro.kernels.lora_matmul import lora_matmul, slot_lora_matmul
 from repro.kernels.rglru_scan import rglru_scan
 
 TOLS = {jnp.float32: 2e-4, jnp.bfloat16: 2e-2}
@@ -32,6 +32,46 @@ def test_lora_matmul(M, K, N, r, dtype, key):
     np.testing.assert_allclose(np.asarray(y, np.float32),
                                np.asarray(yr, np.float32),
                                rtol=_tol(dtype), atol=K * _tol(dtype) * 0.05)
+
+
+@pytest.mark.parametrize("B,K,N,r,n_ad", [(4, 128, 128, 8, 4),
+                                          (3, 256, 384, 16, 8),
+                                          (8, 128, 256, 4, 1)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_slot_lora_matmul(B, K, N, r, n_ad, dtype, key):
+    """Per-slot adapter gather kernel (multi-adapter serving) vs oracle,
+    including repeated and out-of-order slot ids."""
+    ks = jax.random.split(key, 4)
+    x = jax.random.normal(ks[0], (B, K), dtype)
+    w = jax.random.normal(ks[1], (K, N), dtype)
+    a = (jax.random.normal(ks[2], (n_ad, K, r)) * 0.1).astype(dtype)
+    b = (jax.random.normal(ks[3], (n_ad, r, N)) * 0.1).astype(dtype)
+    rng = np.random.default_rng(B * K)
+    slots = jnp.asarray(rng.integers(0, n_ad, size=B), jnp.int32)
+    y = slot_lora_matmul(x, w, a, b, slots, scale=2.0, bk=64, interpret=True)
+    yr = ref.slot_lora_matmul_ref(x, w, a, b, slots, 2.0)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(yr, np.float32),
+                               rtol=_tol(dtype), atol=K * _tol(dtype) * 0.05)
+
+
+def test_slot_lora_matmul_matches_single_adapter(key):
+    """Slot row i with adapter s is bit-for-bit the plain single-adapter
+    lora path for (x_i, a[s], b[s]) — the serving-equals-training-math
+    invariant multi-adapter decode relies on."""
+    from repro.kernels import ops
+    ks = jax.random.split(key, 4)
+    B, K, N, r, n_ad = 4, 128, 192, 8, 6
+    x = jax.random.normal(ks[0], (B, K))
+    w = jax.random.normal(ks[1], (K, N))
+    a = jax.random.normal(ks[2], (n_ad, K, r)) * 0.1
+    b = jax.random.normal(ks[3], (n_ad, r, N)) * 0.1
+    slots = jnp.asarray([5, 0, 5, 2], jnp.int32)
+    y = ops.slot_lora_matmul(x, w, a, b, slots, 2.0)
+    for i, s in enumerate([5, 0, 5, 2]):
+        yi = x[i:i + 1] @ w + ((x[i:i + 1] @ a[s]) @ b[s]) * 2.0
+        np.testing.assert_array_equal(np.asarray(y[i:i + 1]),
+                                      np.asarray(yi))
 
 
 @pytest.mark.parametrize("S,L,window,causal", [

@@ -1,10 +1,13 @@
-"""Serving engine + attribution + MoE dispatch equivalence tests."""
+"""Serving engine (single- and multi-adapter) + attribution + MoE dispatch
+equivalence tests."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.api.serving import AdapterPool, ServingSession
 from repro.configs import get_config
+from repro.core.lora import build_lora_tree, client_slice, merge_lora
 from repro.launch.serving import ServeEngine
 from repro.models import transformer as tf
 
@@ -16,21 +19,35 @@ def served():
     return cfg, params
 
 
-def _reference_generate(params, cfg, prompt, max_new):
+@pytest.fixture(scope="module")
+def adapter_bank(served):
+    """8 distinct nonzero adapters stacked on the client axis."""
+    cfg, params = served
+    tree = build_lora_tree(jax.random.key(3), params, cfg, n_clients=8)
+    c = [0]
+
+    def fill(x):
+        c[0] += 1
+        return 0.3 * jax.random.normal(jax.random.key(100 + c[0]), x.shape)
+    return jax.tree.map(fill, tree)
+
+
+def _reference_generate(params, cfg, prompt, max_new, lora=None):
     """Single-sequence greedy reference using a fresh cache."""
     cache = tf.init_cache(cfg, 1, 64)
     toks = list(prompt)
     logits = None
     for t in toks:
         logits, cache = tf.decode_step(params, cfg,
-                                       jnp.asarray([[t]], jnp.int32), cache)
+                                       jnp.asarray([[t]], jnp.int32), cache,
+                                       lora=lora)
     out = []
     for _ in range(max_new):
         nxt = int(jnp.argmax(logits[0, -1, :cfg.vocab_size]))
         out.append(nxt)
         logits, cache = tf.decode_step(params, cfg,
                                        jnp.asarray([[nxt]], jnp.int32),
-                                       cache)
+                                       cache, lora=lora)
     return out
 
 
@@ -82,6 +99,166 @@ def test_slot_reuse_isolated(served):
     eng.run()
     ref2 = _reference_generate(params, cfg, p2, 4)
     assert r2.tokens_out == ref2
+
+
+# ---------------------------------------------------------------------------
+# multi-adapter serving (ServingSession / AdapterPool)
+# ---------------------------------------------------------------------------
+
+def test_multi_adapter_matches_per_adapter_decode(served, adapter_bank):
+    """4 slots on 4 distinct adapters decode exactly what each adapter's
+    own single-adapter decode produces (the slot gather is bit-for-bit the
+    plain lora path), in one compiled step."""
+    cfg, params = served
+    pool = AdapterPool.from_stacked(adapter_bank, consensus=False)
+    serving = ServingSession(model_cfg=cfg, params=params, adapters=pool,
+                             n_slots=4, max_len=64)
+    rng = np.random.default_rng(2)
+    prompts = [rng.integers(0, cfg.vocab_size, size=5).astype(np.int32)
+               for _ in range(4)]
+    names = ["client_1", "client_3", "client_5", "client_7"]
+    rids = [serving.submit(p, adapter=nm, max_new=6)
+            for p, nm in zip(prompts, names)]
+    serving.run()
+    for rid, p, nm in zip(rids, prompts, names):
+        i = int(nm.split("_")[1])
+        ref = _reference_generate(params, cfg, p, 6,
+                                  lora=client_slice(adapter_bank, i))
+        assert serving.result(rid) == ref, (nm, serving.result(rid), ref)
+    assert serving.compile_count == 1
+
+
+def test_multi_adapter_matches_merged_decode(served, adapter_bank):
+    """Slot-served adapters reproduce the merged-weights model (ΔW folded
+    into W) token-for-token for every slot."""
+    cfg, params = served
+    pool = AdapterPool.from_stacked(adapter_bank, consensus=False)
+    serving = ServingSession(model_cfg=cfg, params=params, adapters=pool,
+                             n_slots=2, max_len=64)
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, cfg.vocab_size, size=4).astype(np.int32)
+               for _ in range(2)]
+    rids = [serving.submit(p, adapter=f"client_{i}", max_new=5)
+            for i, p in enumerate(prompts)]
+    serving.run()
+    for rid, p, i in zip(rids, prompts, range(2)):
+        merged = merge_lora(params, client_slice(adapter_bank, i), cfg)
+        ref = _reference_generate(merged, cfg, p, 5)
+        assert serving.result(rid) == ref
+
+
+def test_base_adapter_is_base_model(served, adapter_bank):
+    """adapter=None (pool row 0, all zeros) decodes exactly the raw base
+    model."""
+    cfg, params = served
+    pool = AdapterPool.from_stacked(adapter_bank, consensus=False)
+    serving = ServingSession(model_cfg=cfg, params=params, adapters=pool,
+                             n_slots=1, max_len=64)
+    rng = np.random.default_rng(4)
+    p = rng.integers(0, cfg.vocab_size, size=4).astype(np.int32)
+    toks = serving.generate(p, max_new=5)
+    assert toks == _reference_generate(params, cfg, p, 5)
+    with pytest.raises(KeyError):      # bad names rejected at submit,
+        serving.submit(p, adapter="client_99")   # never mid-admission
+
+
+def test_hot_swap_mid_stream_changes_only_swapped_slot(served, adapter_bank):
+    """pool.update between ticks redirects ONLY the swapped slot's
+    continuation; the other slot's stream is untouched."""
+    cfg, params = served
+
+    def fresh():
+        pool = AdapterPool.from_stacked(adapter_bank, consensus=False)
+        s = ServingSession(model_cfg=cfg, params=params, adapters=pool,
+                           n_slots=2, max_len=64)
+        rng = np.random.default_rng(5)
+        pr = [rng.integers(0, cfg.vocab_size, size=4).astype(np.int32)
+              for _ in range(2)]
+        rids = [s.submit(pr[0], adapter="client_0", max_new=10),
+                s.submit(pr[1], adapter="client_1", max_new=10)]
+        return s, rids
+
+    base_s, base_rids = fresh()
+    base_s.run()
+    base_out = [base_s.result(r) for r in base_rids]
+
+    swap_s, swap_rids = fresh()
+    for _ in range(7):          # 4 prompt ticks + 3 generated tokens
+        swap_s.tick()
+    pre = [list(swap_s.result(r)) for r in swap_rids]
+    assert len(pre[1]) >= 2     # mid-stream, not pre-prefill
+    big = jax.tree.map(lambda x: 5.0 * jnp.ones_like(x[..., 0, :, :]),
+                       adapter_bank)
+    swap_s.update_adapter("client_1", big)
+    swap_s.run()
+    out = [swap_s.result(r) for r in swap_rids]
+
+    assert out[0] == base_out[0]                       # untouched slot
+    assert out[1][:len(pre[1])] == base_out[1][:len(pre[1])]
+    assert out[1] != base_out[1]                       # continuation moved
+    assert swap_s.compile_count == 1                   # swap never retraced
+
+
+def test_one_compile_across_adapter_counts(served, adapter_bank):
+    """n_adapters ∈ {1, 4, 8} through one fixed-capacity pool = exactly
+    one decode_step trace (adapter selection is data, not shape)."""
+    cfg, params = served
+    pool = AdapterPool.from_stacked(adapter_bank, consensus=False)
+    serving = ServingSession(model_cfg=cfg, params=params, adapters=pool,
+                             n_slots=4, max_len=64)
+    rng = np.random.default_rng(6)
+    for n_adapters in (1, 4, 8):
+        for i in range(4):
+            p = rng.integers(0, cfg.vocab_size, size=3).astype(np.int32)
+            serving.submit(p, adapter=f"client_{i % n_adapters}", max_new=2)
+        serving.run()
+    assert serving.compile_count == 1
+
+
+def test_adapter_pool_bookkeeping(served, adapter_bank):
+    cfg, params = served
+    pool = AdapterPool.from_stacked(adapter_bank, capacity=12)
+    assert pool.row(None) == 0 and pool.row("base") == 0
+    assert pool.row("client_2") == 3 and pool.row(5) == 5
+    assert pool.ids[-1] == "consensus" and pool.capacity == 12
+    with pytest.raises(KeyError):
+        pool.row("nope")
+    with pytest.raises(ValueError):
+        pool.update("base", client_slice(adapter_bank, 0))
+    # zero row: base adapter contributes nothing
+    base = pool.adapter(None)
+    assert all(float(jnp.abs(x).max()) == 0.0
+               for x in jax.tree.leaves(base))
+    # add into free rows until full
+    free = pool.capacity - pool.n_adapters
+    for j in range(free):
+        pool.add(f"extra_{j}", client_slice(adapter_bank, 0))
+    with pytest.raises(ValueError):
+        pool.add("overflow", client_slice(adapter_bank, 0))
+
+
+def test_serve_sync_tracks_training(served):
+    """ServeSync pushes per-client + consensus adapters into a live
+    ServingSession every round; pool rows equal the session's lora."""
+    from repro.api import DFLConfig, ServeSync, Session
+    from repro.core.lora import client_mean
+
+    cfg = DFLConfig(model="gemma3-1b", task="lm", n_clients=4, rounds=2,
+                    local_steps=1, batch_size=2, seq_len=16, T=1)
+    sess = Session(cfg)
+    serving = ServingSession.from_session(sess, n_slots=2, max_len=32)
+    sess.callbacks.append(ServeSync(serving, every=1))
+    sess.run()
+    for i in range(4):
+        want = sess.client_lora(i)
+        got = serving.pool.adapter(f"client_{i}")
+        for wl, gl in zip(jax.tree.leaves(want), jax.tree.leaves(got)):
+            np.testing.assert_array_equal(np.asarray(wl), np.asarray(gl))
+    cons = serving.pool.adapter("consensus")
+    for wl, gl in zip(jax.tree.leaves(client_mean(sess.lora)),
+                      jax.tree.leaves(cons)):
+        np.testing.assert_allclose(np.asarray(wl), np.asarray(gl),
+                                   rtol=1e-6, atol=1e-7)
 
 
 def test_moe_dispatch_equivalence(key):
