@@ -1,0 +1,105 @@
+"""Multi-process DFL throughput over a simulated process grid.
+
+Spawns ``repro.launch.cluster --simulate N`` for N in {1, 2, 4} local CPU
+processes (gloo collectives) on one shared `DFLConfig` (m = 8 clients, the
+benchmark-harness classifier) and records each grid's rounds/s plus the
+per-round gossip collective payload (`mix_allgather_bytes_per_round` —
+what each process receives: the other processes' client shards of the
+stacked LoRA state). The result goes to BENCH_multihost.json as part of
+the repo's perf trajectory.
+
+On a single CPU box the grids share the same silicon, so rounds/s is
+expected to *drop* as N grows — the point of the trajectory is the cost
+of the real cross-process collective path (spawn + gloo + all-gather),
+not a scaling claim; `scale_vs_1p` makes the ratio explicit and the CI
+regression gate pins it.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import tempfile
+
+PROC_GRID = (1, 2, 4)
+M = 8
+
+
+def _worker_args(rounds: int, json_path: str) -> list:
+    return ["--preset", "classifier", "--clients", str(M),
+            "--rounds", str(rounds), "--local-steps", "2",
+            "--interval", "2", "--p", "0.5", "--seed", "0",
+            "--json", json_path, "--quiet"]
+
+
+def run(quick: bool = True, json_path: str | None = None) -> dict:
+    from repro.launch.cluster import failed_ranks, spawn_simulated
+
+    rounds = 8 if quick else 24
+    rows = []
+    with tempfile.TemporaryDirectory() as tmp:
+        for n in PROC_GRID:
+            out = os.path.join(tmp, f"grid{n}.json")
+            results = spawn_simulated(n, _worker_args(rounds, out))
+            failed = failed_ranks(results)
+            if failed:
+                raise RuntimeError(
+                    f"{n}-process grid failed:\n" +
+                    "\n".join(report for _, report in failed))
+            with open(out) as f:
+                payload = json.load(f)
+            rows.append({
+                "n_processes": n,
+                "clients_per_process": payload["clients_per_process"],
+                "rounds_per_s": payload["rounds_per_s"],
+                "us_per_round": round(1e6 / payload["rounds_per_s"], 1),
+                "mix_allgather_bytes_per_round":
+                    payload["mix_allgather_bytes_per_round"],
+                "final_loss": payload["final_loss"],
+            })
+
+    base_rps = rows[0]["rounds_per_s"]
+    for row in rows:
+        row["scale_vs_1p"] = round(row["rounds_per_s"] / base_rps, 3)
+    # every grid optimizes the same function from the same seed: the final
+    # losses must agree across process counts (parity smoke; the bitwise
+    # assertion lives in tests/test_multihost.py)
+    losses = {row["final_loss"] for row in rows}
+    parity = len(losses) == 1
+
+    result = {
+        "backend": "cpu",
+        "m": M,
+        "rounds": rounds,
+        "preset": "classifier",
+        "loss_parity_across_grids": parity,
+        "rows": rows,
+    }
+    print("\n=== multi-process grids (simulated, gloo) ===")
+    print("n_proc,clients/proc,rounds_per_s,scale_vs_1p,allgather_B/round")
+    for row in rows:
+        print(f"{row['n_processes']},{row['clients_per_process']},"
+              f"{row['rounds_per_s']},{row['scale_vs_1p']},"
+              f"{row['mix_allgather_bytes_per_round']}")
+    print(f"loss parity across grids: {parity}")
+    if json_path:
+        # written BEFORE the parity check fails: on divergence the CI
+        # artifact must carry the diverging run's rows, not a stale file
+        with open(json_path, "w") as f:
+            json.dump(result, f, indent=1)
+        print(f"wrote {json_path}")
+    if not parity:
+        raise RuntimeError(f"process grids diverged: losses {sorted(losses)}")
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--paper", action="store_true", help="more rounds")
+    ap.add_argument("--json", default="BENCH_multihost.json")
+    args = ap.parse_args()
+    run(quick=not args.paper, json_path=args.json or None)
+
+
+if __name__ == "__main__":
+    main()

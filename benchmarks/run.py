@@ -22,7 +22,7 @@ import traceback
 
 BENCHES = ("fig2", "table1", "fig3", "fig4", "table3", "table5",
            "theory", "adaptive", "kernels", "roofline", "round_loop",
-           "scenarios", "serving")
+           "scenarios", "serving", "multihost")
 
 
 def _headline(name: str, result) -> str:
@@ -66,6 +66,12 @@ def _headline(name: str, result) -> str:
                    if r["mode"] == "multi"]
             return (f"multi_vs_merged_worst={max(ovs):+.1f}%,"
                     f"one_compile={result['one_compile']}")
+        if name == "multihost":
+            rps = {r["n_processes"]: r["rounds_per_s"]
+                   for r in result["rows"]}
+            return (f"rps_1p={rps.get(1, 0):.1f},rps_2p={rps.get(2, 0):.1f},"
+                    f"rps_4p={rps.get(4, 0):.1f},"
+                    f"parity={result['loss_parity_across_grids']}")
     except Exception:
         pass
     return "done"
@@ -91,30 +97,38 @@ def main() -> None:
     ap.add_argument("--serving-json", default="BENCH_serving.json",
                     help="where the serving bench records multi-adapter "
                          "decode throughput ('' disables)")
+    ap.add_argument("--multihost-json", default="BENCH_multihost.json",
+                    help="where the multihost bench records process-grid "
+                         "throughput ('' disables)")
     args = ap.parse_args()
     quick = not args.paper
     selected = [b.strip() for b in args.only.split(",") if b.strip()] \
         or list(BENCHES)
+    # a typo'd --only must fail loudly, not pass vacuously: validate
+    # BEFORE the (slow) benchmark imports so CI steps die in milliseconds
+    unknown = [b for b in selected if b not in BENCHES]
+    if unknown:
+        print(f"unknown benchmark(s) {', '.join(map(repr, unknown))}; "
+              f"known: {','.join(BENCHES)}", file=sys.stderr)
+        sys.exit(2)
 
     from benchmarks import (adaptive_t, fig2_acc_vs_p, fig3_tstar,
-                            fig4_heatmap, kernel_micro, roofline_report,
-                            round_loop, scenarios, serving, table1_regimes,
-                            table3_weak_avg, table5_ring, theory_crossterm)
+                            fig4_heatmap, kernel_micro, multihost,
+                            roofline_report, round_loop, scenarios, serving,
+                            table1_regimes, table3_weak_avg, table5_ring,
+                            theory_crossterm)
     mods = {"fig2": fig2_acc_vs_p, "table1": table1_regimes,
             "fig3": fig3_tstar, "fig4": fig4_heatmap,
             "table3": table3_weak_avg, "table5": table5_ring,
             "theory": theory_crossterm, "adaptive": adaptive_t,
             "kernels": kernel_micro, "roofline": roofline_report,
             "round_loop": round_loop, "scenarios": scenarios,
-            "serving": serving}
+            "serving": serving, "multihost": multihost}
 
     csv_rows = []
     json_rows = []
     failed = []
     for name in selected:
-        if name not in mods:
-            print(f"unknown benchmark {name!r}", file=sys.stderr)
-            continue
         print(f"\n{'='*70}\n## {name}  ({mods[name].__doc__.splitlines()[0]})"
               f"\n{'='*70}", flush=True)
         kwargs = {}
@@ -126,6 +140,8 @@ def main() -> None:
             kwargs["json_path"] = args.scenarios_json
         if name == "serving" and args.serving_json:
             kwargs["json_path"] = args.serving_json
+        if name == "multihost" and args.multihost_json:
+            kwargs["json_path"] = args.multihost_json
         t0 = time.time()
         try:
             result = mods[name].run(quick=quick, **kwargs)

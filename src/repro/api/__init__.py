@@ -3,7 +3,9 @@
 config -> Session -> callbacks: a `DFLConfig` describes the experiment,
 a `Session` owns topology sampling / the compiled mesh-aware round /
 checkpointing, a `MaskSchedule` (static or adaptive) drives the phase
-calendar, and callbacks stream metrics. The serving side mirrors it:
+calendar, and callbacks stream metrics. `ClusterSession` is the same
+Session with its client axis sharded across a process grid
+(`repro.dist.multihost`) — launched by `repro.launch.cluster`. The serving side mirrors it:
 an `AdapterPool` stacks the per-client adapters a run produces and a
 `ServingSession` serves them from one compiled decode step (`ServeSync`
 bridges the two for serve-while-training). `repro.core` stays the
@@ -11,6 +13,7 @@ low-level primitive layer underneath.
 """
 from repro.api.callbacks import (Callback, CheckpointCallback, ConsoleLogger,
                                  HistoryRecorder)
+from repro.api.cluster import ClusterSession
 from repro.api.config import DFLConfig
 from repro.api.rounds import build_round
 from repro.api.schedule import AdaptiveSchedule, MaskSchedule, StaticSchedule
@@ -19,7 +22,7 @@ from repro.api.session import RoundEvent, RunResult, Session
 from repro.scenarios import TopologySchedule, schedule_from_config
 
 __all__ = [
-    "DFLConfig", "Session", "RunResult", "RoundEvent",
+    "DFLConfig", "Session", "ClusterSession", "RunResult", "RoundEvent",
     "MaskSchedule", "StaticSchedule", "AdaptiveSchedule",
     "TopologySchedule", "schedule_from_config",
     "Callback", "ConsoleLogger", "HistoryRecorder", "CheckpointCallback",

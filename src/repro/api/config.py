@@ -33,8 +33,9 @@ CLASSIFIER_TASKS = ("sst2", "qqp", "qnli", "mnli")
 TOPOLOGIES = GRAPH_FAMILIES
 MIX_IMPLS = ("planned", "per_leaf", "concat")
 FLAT_LOWERINGS = ("auto", "flat", "per_segment")
+MIX_GATHER_MODES = ("auto", "on", "off")
 
-_KEY_VERSION = 3   # bump when semantics of any field change
+_KEY_VERSION = 4   # bump when semantics of any field change
 
 
 @dataclass(frozen=True)
@@ -72,6 +73,9 @@ class DFLConfig:
     # -- engine -------------------------------------------------------------
     mix_impl: str = "planned"
     mix_flat_lowering: str = "auto"   # auto = flat on TPU, per-segment off
+    mix_gather: str = "auto"     # all-gather clients before mixing:
+                                 # auto = on iff multi-process (bitwise
+                                 # cluster parity), "on"/"off" pin it
     donate: bool = False         # donate lora/opt buffers (in-place round)
 
     # -- seeds / data -------------------------------------------------------
@@ -124,6 +128,9 @@ class DFLConfig:
         check(self.mix_flat_lowering in FLAT_LOWERINGS,
               f"unknown mix_flat_lowering {self.mix_flat_lowering!r}; "
               f"known: {FLAT_LOWERINGS}")
+        check(self.mix_gather in MIX_GATHER_MODES,
+              f"unknown mix_gather {self.mix_gather!r}; "
+              f"known: {MIX_GATHER_MODES}")
         check(self.n_clients >= 2, "n_clients must be >= 2")
         check(0.0 < self.p <= 1.0, "p must be in (0, 1]")
         check(self.rounds > 0, "rounds must be positive")

@@ -18,14 +18,19 @@ def build_round(loss_fn: Callable, optimizer: AdamW, *,
                 local_steps: int = 1,
                 mix_impl: str = "planned",
                 mix_flat_lowering: Optional[str] = None,
+                mix_gather: bool = False,
                 donate: bool = False):
     """Build round_fn(base, lora, opt_state, batch, W, masks).
 
     mix_flat_lowering ("auto" | "flat" | "per_segment") pins the planned
     path's fused-buffer lowering for this round function; None defers to
     the process default (repro.core.mixing.set_flat_lowering).
+    mix_gather pins the cluster communication step: all-gather the client
+    axis before the mixing contraction (bitwise-parity lowering for
+    multi-process runs; no-op without a bound mesh).
     """
     return make_dfl_round(loss_fn, optimizer, local_steps=local_steps,
                           mix_impl=mix_impl,
                           mix_flat_lowering=mix_flat_lowering,
+                          mix_gather=mix_gather,
                           donate=donate)

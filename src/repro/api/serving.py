@@ -382,4 +382,13 @@ class ServeSync(Callback):
         if self.every > 1 and (event.t + 1) % self.every != 0 \
                 and not event.is_last:
             return
-        self.serving.pool.sync_from(event.lora, consensus=self.consensus)
+        lora = event.lora
+        from repro.dist import multihost
+        if multihost.is_distributed():
+            # under a ClusterSession the client axis is sharded across
+            # processes while each pool is process-local serving state —
+            # gather to host (exact) so every process's engine serves the
+            # full adapter set. Runs on all ranks (it is a collective).
+            lora = multihost.to_host(lora,
+                                     getattr(event.session, "mesh", None))
+        self.serving.pool.sync_from(lora, consensus=self.consensus)

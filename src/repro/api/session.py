@@ -128,10 +128,23 @@ class _Built:
 _BUILD_CACHE: dict = {}
 
 
+def _resolve_mix_gather(mode: str) -> bool:
+    """"auto" turns the pre-mix client all-gather on exactly when the run
+    spans processes (repro.dist.multihost) — single-process rounds keep
+    the unconstrained lowering, cluster rounds pin the bitwise-parity
+    communication step."""
+    if mode == "on":
+        return True
+    if mode == "off":
+        return False
+    return jax.process_count() > 1
+
+
 def _build_key(cfg: DFLConfig):
     return (cfg.model, cfg.reduced, cfg.model_kw, cfg.task,
             cfg.feature_shift, cfg.n_clients, cfg.lr, cfg.local_steps,
-            cfg.mix_impl, cfg.mix_flat_lowering, cfg.donate, cfg.init_seed)
+            cfg.mix_impl, cfg.mix_flat_lowering,
+            _resolve_mix_gather(cfg.mix_gather), cfg.donate, cfg.init_seed)
 
 
 def _build(cfg: DFLConfig, model_cfg, loss_fn) -> _Built:
@@ -181,6 +194,7 @@ def _build(cfg: DFLConfig, model_cfg, loss_fn) -> _Built:
     round_fn = build_round(loss_fn, opt, local_steps=cfg.local_steps,
                            mix_impl=cfg.mix_impl,
                            mix_flat_lowering=cfg.mix_flat_lowering,
+                           mix_gather=_resolve_mix_gather(cfg.mix_gather),
                            donate=cfg.donate)
     if not cfg.donate:
         round_fn = jax.jit(round_fn)
@@ -330,15 +344,27 @@ class Session:
                                          cfg.local_steps, rounds=1 << 62,
                                          seed=cfg.data_seed)
 
-    def _to_device(self, raw):
-        batch = jax.tree.map(jnp.asarray, raw)
+    def _device_scalar_inputs(self, x):
+        """Placement hook for the round's small replicated inputs (W_t,
+        masks). ClusterSession overrides this to build global replicated
+        arrays on the cluster mesh; single-process it is a plain put."""
+        return jnp.asarray(x)
+
+    def _raw_round_batch(self, raw) -> dict:
+        """Complete one round's raw numpy batch (adds the frontend-token
+        zeros LM archs expect). Placement-independent: ClusterSession
+        reuses this and only changes where the leaves land."""
         cfg = self.config
+        raw = dict(raw)
         nft = getattr(self.model_cfg, "n_frontend_tokens", 0)
         if cfg.task == "lm" and nft:
-            batch["frontend"] = jnp.zeros(
+            raw["frontend"] = np.zeros(
                 (cfg.local_steps, cfg.n_clients, cfg.batch_size, nft,
-                 self.model_cfg.d_model), jnp.float32)
-        return batch
+                 self.model_cfg.d_model), np.float32)
+        return raw
+
+    def _to_device(self, raw):
+        return jax.tree.map(jnp.asarray, self._raw_round_batch(raw))
 
     # -- the round loop -----------------------------------------------------
     def step(self) -> RoundEvent:
@@ -357,7 +383,8 @@ class Session:
             t, {"W": W_np, "round": t, "session": self})
         self.lora, self.opt_state, metrics = self.round_fn(
             self.base, self.lora, self.opt_state, batch,
-            jnp.asarray(W_np, jnp.float32), masks.as_array())
+            self._device_scalar_inputs(np.asarray(W_np, np.float32)),
+            self._device_scalar_inputs(masks.as_array()))
         self.last_metrics = metrics
         # t advances BEFORE callbacks fire: a checkpoint taken inside a
         # callback resumes after the round it just observed
@@ -407,8 +434,10 @@ class Session:
         cfg = self.config
         test = eval_batch(self.task, n if n is not None else cfg.eval_n,
                           seed=seed if seed is not None else cfg.eval_seed)
-        toks = jnp.asarray(test["tokens"])
-        labs = jnp.asarray(test["labels"])
+        # placement hook: on a cluster the eval batch must be replicated
+        # onto the global mesh next to the replicated base params
+        toks = self._device_scalar_inputs(test["tokens"])
+        labs = self._device_scalar_inputs(test["labels"])
         accs = [float(self._acc_fn(self.base, toks, labs,
                                    self.client_lora(i)))
                 for i in range(cfg.n_clients)]

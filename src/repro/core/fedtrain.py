@@ -22,7 +22,7 @@ import jax.numpy as jnp
 
 from repro.core import mixing
 from repro.core.lora import shard_lora_tree
-from repro.dist.sharding import logical
+from repro.dist.sharding import gather_clients, logical
 from repro.optim.adamw import AdamW, AdamWState
 
 
@@ -45,6 +45,7 @@ def make_dfl_round(loss_fn: Callable, optimizer: AdamW, *,
                    local_steps: int = 1,
                    mix_impl: str = "planned",
                    mix_flat_lowering: Optional[str] = None,
+                   mix_gather: bool = False,
                    donate: bool = False):
     """Build the jit-able round function.
 
@@ -63,6 +64,13 @@ def make_dfl_round(loss_fn: Callable, optimizer: AdamW, *,
     default) pins the planned path's buffer lowering — "auto" gates the
     flat (m, P) buffer to TPU backends (SPMD full-remat warning on the
     chunk reshape under GSPMD; per-segment dots win off-TPU).
+    With ``mix_gather`` the stacked LoRA state is constrained fully
+    replicated BEFORE the mixing contraction: under a cluster mesh
+    (repro.dist.multihost) this pins the communication step to one
+    all-gather of the client axis + a replicated contraction, whose
+    arithmetic is bitwise equal to the single-process round (GSPMD is
+    otherwise free to pick a psum decomposition with a different
+    reduction order). Off-mesh it is a no-op.
     With ``donate`` the returned function is jitted with the lora/opt_state
     buffers donated (in-place round at production scale) — callers must
     then treat the passed-in trees as consumed.
@@ -87,6 +95,8 @@ def make_dfl_round(loss_fn: Callable, optimizer: AdamW, *,
             local_step, (lora, opt_state), batch)
 
         # Joint mixing (Algorithm 1 lines 7–9): masks select per method.
+        if mix_gather:
+            lora_new = gather_clients(lora_new)
         lora_new = mix(W, lora_new, masks[2], masks[3])
         lora_new = shard_lora_tree(lora_new)
         metrics = {"loss": jnp.mean(losses), "loss_per_step": losses}

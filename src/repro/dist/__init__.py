@@ -1,9 +1,14 @@
-"""Distribution substrate: the logical-axis sharding layer (GSPMD).
+"""Distribution substrate: sharding (GSPMD) + multihost (process grid).
 
 ``repro.dist.sharding`` is the single place where logical axis names
 ("clients", "batch", "model", "fsdp", ...) meet concrete mesh axes.
 Model and launch code never name mesh axes directly.
-"""
-from repro.dist import sharding
 
-__all__ = ["sharding"]
+``repro.dist.multihost`` makes the mesh span processes: process-grid
+initialization (`jax.distributed`), the cluster mesh, client-axis
+ownership, and exact host<->global array movement (replicate /
+shard_clients / fully_replicated). `repro.api.ClusterSession` sits on it.
+"""
+from repro.dist import multihost, sharding
+
+__all__ = ["sharding", "multihost"]

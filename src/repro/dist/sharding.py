@@ -127,6 +127,30 @@ def logical(x: jax.Array, *names) -> jax.Array:
     return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
 
 
+def replicated(x: jax.Array) -> jax.Array:
+    """Constrain ``x`` fully replicated on the bound mesh (no-op unbound).
+
+    Under a cluster mesh this is the explicit gather: GSPMD lowers the
+    constraint to an all-gather of whatever axes ``x`` was sharded over.
+    The gather is exact (pure data movement), so computations downstream
+    of it are bitwise equal to their single-process lowering.
+    """
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P()))
+
+
+def gather_clients(tree):
+    """Replicate every leaf of a client-sharded tree (see ``replicated``).
+    The DFL round applies this before gossip mixing when ``mix_gather``
+    is on: one all-gather of the stacked LoRA state per round — the
+    paper's communication step, made explicit — followed by a mixing
+    contraction whose per-element arithmetic matches the single-process
+    round bit-for-bit."""
+    return jax.tree.map(replicated, tree)
+
+
 # ---------------------------------------------------------------------------
 # Parameter sharding (Megatron rules)
 # ---------------------------------------------------------------------------

@@ -1,0 +1,270 @@
+"""Cluster entrypoint: multi-process DFL execution on the repro.dist grid.
+
+Two modes in one module:
+
+*Worker* (the default): join the process grid via the ``REPRO_*`` env
+protocol (or explicit ``--coordinator/--num-processes/--process-id``),
+build a `DFLConfig`, run a `repro.api.ClusterSession`, optionally save a
+checkpoint / JSON result (rank 0 only). On a real cluster every node runs
+this with its own ``REPRO_PROCESS_ID``.
+
+*Parent* (``--simulate N``): spawn N local worker processes on the
+portable CPU backend (gloo collectives), forward the remaining CLI args to
+each, stream rank 0's output, and exit non-zero if any worker fails. This
+is how CI exercises the whole multi-process path headless:
+
+  PYTHONPATH=src python -m repro.launch.cluster --simulate 2 \\
+      --preset classifier --rounds 6 --clients 4 --json out.json
+
+The worker JSON records the cluster perf surface: rounds/s, the analytic
+gossip all-gather payload per round (`mix_allgather_bytes_per_round` —
+what each process *receives*: the other processes' client shards of the
+stacked LoRA state), and the final loss, so tests and
+``benchmarks/multihost.py`` share one measurement path.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import socket
+import subprocess
+import sys
+import time
+from typing import Optional, Sequence
+
+# NOTE: jax / repro.api imports happen inside worker_main(), AFTER
+# multihost.initialize() — the grid must exist before the backend is used.
+
+PRESETS = ("classifier", "lm")
+
+
+def _preset_config(args) -> dict:
+    """A DFLConfig dict from the CLI knobs (small enough for CI)."""
+    if args.preset == "classifier":
+        cfg = dict(model="encoder", task="sst2",
+                   model_kw={"n_layers": 1, "d_model": 32, "n_heads": 2,
+                             "d_ff": 64, "vocab_size": 256},
+                   batch_size=args.batch or 8)
+    else:
+        cfg = dict(model=args.arch, task="lm", reduced=True,
+                   batch_size=args.batch or 2, seq_len=args.seq)
+    cfg.update(n_clients=args.clients, topology=args.topology, p=args.p,
+               scenario=args.scenario, method=args.method, T=args.interval,
+               rounds=args.rounds, local_steps=args.local_steps,
+               lr=args.lr, seed=args.seed)
+    return cfg
+
+
+def _mix_allgather_bytes(lora, m: int, n_processes: int) -> int:
+    """Per-round gossip collective payload a process RECEIVES under the
+    mix_gather lowering: every other process's client shard of the stacked
+    LoRA state (4-byte floats). 0 when the grid is a single process."""
+    import jax
+    per_client = sum(x.size for x in jax.tree.leaves(lora)) // m
+    remote_clients = m - m // n_processes
+    return 4 * per_client * remote_clients if n_processes > 1 else 0
+
+
+def worker_main(args) -> int:
+    from repro.dist import multihost
+    multihost.initialize(coordinator=args.coordinator,
+                         num_processes=args.num_processes,
+                         process_id=args.process_id)
+
+    import jax
+    from repro.api import ClusterSession, ConsoleLogger, DFLConfig
+
+    if args.config:
+        with open(args.config) as f:
+            config = DFLConfig.from_dict(json.load(f))
+    else:
+        config = DFLConfig(**_preset_config(args))
+
+    callbacks = []
+    if multihost.is_primary() and not args.quiet:
+        # loss is a fully-replicated scalar — float() is a local read, so
+        # rank-gating this callback breaks no collective lockstep
+        callbacks.append(ConsoleLogger(every=max(1, config.rounds // 10)))
+    session = ClusterSession(config, callbacks=callbacks)
+
+    if args.restore:
+        at = session.restore(args.restore)
+        if multihost.is_primary():
+            print(f"restored {args.restore} at round {at}", flush=True)
+
+    rounds = args.run_rounds or None
+    t0 = time.perf_counter()
+    result = session.run(rounds)
+    wall = time.perf_counter() - t0
+
+    if args.ckpt:
+        session.save(args.ckpt)
+    eval_res = None
+    if args.eval:
+        # a collective: every rank computes, rank 0 reports
+        eval_res = session.evaluate(n=64)
+    if multihost.is_primary():
+        m = config.n_clients
+        n_proc = jax.process_count()
+        payload = {
+            "n_processes": n_proc,
+            "n_devices": jax.device_count(),
+            "m": m,
+            "clients_per_process": m // n_proc,
+            "rounds": result.rounds,
+            "wall_s": round(wall, 4),
+            "rounds_per_s": round(result.rounds / wall, 2),
+            "final_loss": result.final_loss,
+            "final_round": session.t,
+            "mix_allgather_bytes_per_round": _mix_allgather_bytes(
+                session.lora, m, n_proc),
+        }
+        if eval_res is not None:
+            payload["eval_acc"] = eval_res["acc"]
+        print(f"[cluster] {json.dumps(payload)}", flush=True)
+        if args.json:
+            with open(args.json, "w") as f:
+                json.dump(payload, f, indent=1)
+    multihost.sync("cluster-exit")
+    multihost.shutdown()
+    return 0
+
+
+# ---------------------------------------------------------------------------
+# --simulate N: the local process-grid spawner (CI / laptop path)
+# ---------------------------------------------------------------------------
+
+def _free_port() -> int:
+    with socket.socket() as s:
+        s.bind(("127.0.0.1", 0))
+        return s.getsockname()[1]
+
+
+def spawn_simulated(n: int, worker_args: Sequence[str], *,
+                    timeout: float = 900.0,
+                    extra_env: Optional[dict] = None):
+    """Spawn ``python -m repro.launch.cluster`` × n as a local grid.
+
+    Returns a list of (returncode, combined_output) per rank. Workers run
+    on the portable CPU backend with gloo collectives; the repro source
+    tree is put on each worker's PYTHONPATH so the spawner works from a
+    plain checkout.
+    """
+    src = os.path.dirname(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+    coord = f"127.0.0.1:{_free_port()}"
+    env = dict(os.environ)
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    if extra_env:
+        env.update(extra_env)
+    procs = []
+    for i in range(n):
+        env_i = dict(env)
+        env_i["REPRO_COORDINATOR"] = coord
+        env_i["REPRO_NUM_PROCESSES"] = str(n)
+        env_i["REPRO_PROCESS_ID"] = str(i)
+        procs.append(subprocess.Popen(
+            [sys.executable, "-m", "repro.launch.cluster", *worker_args],
+            env=env_i, stdout=subprocess.PIPE, stderr=subprocess.STDOUT,
+            text=True))
+    out = []
+    deadline = time.monotonic() + timeout
+    for p in procs:
+        left = max(1.0, deadline - time.monotonic())
+        try:
+            stdout, _ = p.communicate(timeout=left)
+        except subprocess.TimeoutExpired:
+            for q in procs:
+                q.kill()
+            stdout, _ = p.communicate()
+            stdout += "\n[spawner] TIMEOUT"
+        out.append((p.returncode, stdout))
+    return out
+
+
+def failed_ranks(results) -> list:
+    """[(rank, formatted report)] for every non-zero worker exit — the one
+    place spawn failures are shaped for humans (bench, tests, CLI)."""
+    return [(rank, f"--- rank {rank} (exit {code}) ---\n{out}")
+            for rank, (code, out) in enumerate(results) if code != 0]
+
+
+def _parser() -> argparse.ArgumentParser:
+    # allow_abbrev=False: a prefix spelling like "--sim 2" must NOT parse
+    # as --simulate while evading the worker-args filter below — workers
+    # re-spawning as parents would fork-bomb the machine
+    ap = argparse.ArgumentParser(
+        description="multi-process DFL (worker, or --simulate N parent)",
+        allow_abbrev=False)
+    ap.add_argument("--simulate", type=int, default=0, metavar="N",
+                    help="spawn N local worker processes and wait (parent "
+                         "mode); 0 = run as a worker")
+    # grid (worker mode; REPRO_* env is the usual source)
+    ap.add_argument("--coordinator", default=None)
+    ap.add_argument("--num-processes", type=int, default=None)
+    ap.add_argument("--process-id", type=int, default=None)
+    # experiment
+    ap.add_argument("--config", default="",
+                    help="JSON DFLConfig dict (overrides the preset knobs)")
+    ap.add_argument("--preset", default="classifier", choices=PRESETS)
+    ap.add_argument("--arch", default="gemma3-1b")
+    ap.add_argument("--method", default="tad",
+                    choices=("lora", "ffa", "rolora", "tad"))
+    ap.add_argument("--clients", type=int, default=4)
+    ap.add_argument("--rounds", type=int, default=8)
+    ap.add_argument("--local-steps", type=int, default=2)
+    ap.add_argument("--batch", type=int, default=0,
+                    help="per-client per-step batch (0 = preset default)")
+    ap.add_argument("--seq", type=int, default=32)
+    ap.add_argument("--topology", default="complete")
+    ap.add_argument("--scenario", default="gossip")
+    ap.add_argument("--p", type=float, default=0.5)
+    ap.add_argument("--interval", type=int, default=2,
+                    help="switching interval T (static)")
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--seed", type=int, default=0)
+    # run control / artifacts
+    ap.add_argument("--run-rounds", type=int, default=0,
+                    help="rounds to run now (0 = config.rounds)")
+    ap.add_argument("--restore", default="")
+    ap.add_argument("--ckpt", default="")
+    ap.add_argument("--eval", action="store_true",
+                    help="session.evaluate() after training (classifier "
+                         "presets; reported in the result JSON)")
+    ap.add_argument("--json", default="",
+                    help="rank-0 result JSON (rounds/s, collective bytes)")
+    ap.add_argument("--quiet", action="store_true")
+    return ap
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    args = _parser().parse_args(argv)
+    if args.simulate:
+        worker_args, skip = [], False
+        for a in argv:
+            if skip:
+                skip = False
+            elif a == "--simulate":
+                skip = True
+            elif not a.startswith("--simulate="):
+                worker_args.append(a)
+        results = spawn_simulated(args.simulate, worker_args)
+        failed = failed_ranks(results)
+        bad = {rank for rank, _ in failed}
+        for rank, (code, outp) in enumerate(results):
+            if rank == 0 and rank not in bad:
+                sys.stdout.write(f"--- rank 0 (exit {code}) ---\n{outp}\n")
+        for _, report in failed:
+            sys.stdout.write(report + "\n")
+        if failed:
+            print(f"[simulate] FAILED ranks: {sorted(bad)}", file=sys.stderr)
+            return 1
+        return 0
+    return worker_main(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -10,14 +10,14 @@ scenario reuses one compiled round.
 from repro.scenarios.library import (SCENARIO_MATRIX, SCENARIO_NAMES,
                                      SCENARIOS, Scenario, estimate_rho_sq,
                                      get_scenario, schedule_from_config)
-from repro.scenarios.schedule import (ClientChurn, EdgeActivation,
-                                      GossipSchedule, PhaseSwitch,
-                                      StaticGraph, StragglerDropout,
-                                      TopologySchedule)
+from repro.scenarios.schedule import (BroadcastSchedule, ClientChurn,
+                                      EdgeActivation, GossipSchedule,
+                                      PhaseSwitch, StaticGraph,
+                                      StragglerDropout, TopologySchedule)
 
 __all__ = [
     "TopologySchedule", "GossipSchedule", "StaticGraph", "EdgeActivation",
-    "ClientChurn", "StragglerDropout", "PhaseSwitch",
+    "ClientChurn", "StragglerDropout", "PhaseSwitch", "BroadcastSchedule",
     "Scenario", "SCENARIO_MATRIX", "SCENARIO_NAMES", "SCENARIOS",
     "schedule_from_config", "estimate_rho_sq", "get_scenario",
 ]

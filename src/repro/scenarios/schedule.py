@@ -21,6 +21,9 @@ Implementations:
                          repair.
   * `PhaseSwitch`      — strong→weak (or any) schedule change at a fixed
                          round boundary.
+  * `BroadcastSchedule`— process-grid agreement wrapper: rank 0 draws,
+                         everyone mixes with the broadcast W_t
+                         (`ClusterSession` wraps every schedule in it).
 
 All Metropolis-based schedules emit symmetric W_t (`symmetric=True`);
 `GossipSchedule` emits products of pairwise averagers (`symmetric=False`),
@@ -151,6 +154,42 @@ class StragglerDropout(EdgeActivation):
         a = self._fired_adj()
         a *= up[:, None] * up[None, :]
         return metropolis_weights(a)
+
+
+class BroadcastSchedule:
+    """Process-grid agreement wrapper: rank 0's W_t is the only draw that
+    counts. `ClusterSession` wraps every schedule in this so all processes
+    mix with the same matrix even when the inner schedule's host RNG or
+    Markov state could drift (user-supplied schedules, non-deterministic
+    sources). Config-derived schedules are already deterministic per seed,
+    so the broadcast is a safety net there — but the paper's setting has
+    exactly one realized W_t per round, and under a cluster that realization
+    must be owned by one process.
+
+    Single-process this is an exact passthrough (same dtype, same RNG
+    stream). Multi-process, the inner schedule only *advances* on rank 0;
+    other ranks receive the broadcast value bit-exactly, widened to
+    float64 (exact for every schedule dtype) so downstream full-precision
+    consumers — `AdaptiveSchedule`'s spectral estimator, checkpoint
+    replay — observe the same values a single-process run would, not a
+    float32 shadow. Checkpoint replay calls `next_w` sequentially on
+    every process, so the broadcast replays in lockstep.
+    """
+
+    def __init__(self, inner: TopologySchedule):
+        self.inner = inner
+        self.m = inner.m
+        self.symmetric = inner.symmetric
+
+    def next_w(self, t: int) -> np.ndarray:
+        from repro.dist import multihost
+        if not multihost.is_distributed():
+            return self.inner.next_w(t)
+        if multihost.is_primary():
+            W = np.asarray(self.inner.next_w(t), np.float64)
+        else:
+            W = np.zeros((self.m, self.m), np.float64)
+        return multihost.broadcast_from_primary(W)
 
 
 class PhaseSwitch:

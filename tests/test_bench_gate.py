@@ -1,0 +1,128 @@
+"""The bench-regression gate and the benchmark registry's --only
+validation: CI plumbing that must fail loudly, tested without importing
+jax (the gate has to be cheap)."""
+import json
+import os
+import subprocess
+import sys
+
+from benchmarks.check_regression import (TRACKED, _multihost, _scenarios,
+                                         _serving, compare, main)
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_extractors_cover_committed_artifacts():
+    """Every committed BENCH_*.json baseline must yield at least one
+    tracked metric — otherwise the gate silently watches nothing."""
+    for name, extract in TRACKED.items():
+        path = os.path.join(ROOT, name)
+        if not os.path.exists(path):
+            continue
+        with open(path) as f:
+            metrics = extract(json.load(f))
+        assert metrics, f"{name}: extractor produced no metrics"
+        for key, (value, direction) in metrics.items():
+            assert value > 0, (name, key)
+            assert direction in ("lower", "higher")
+
+
+def test_compare_directions_and_threshold():
+    base = {"a_us": (100.0, "lower"), "b_tok_s": (100.0, "higher")}
+    # within the band: no regressions
+    ok = {"a_us": (120.0, "lower"), "b_tok_s": (80.0, "higher")}
+    regs, _ = compare(base, ok, threshold=0.25)
+    assert regs == []
+    # a_us 30% slower and b_tok_s 30% lower both breach a 25% band
+    bad = {"a_us": (130.0, "lower"), "b_tok_s": (70.0, "higher")}
+    regs, _ = compare(base, bad, threshold=0.25)
+    assert len(regs) == 2
+    # improvements never fail, regardless of direction
+    good = {"a_us": (10.0, "lower"), "b_tok_s": (500.0, "higher")}
+    regs, _ = compare(base, good, threshold=0.25)
+    assert regs == []
+    # missing + new metrics surface as notes, not failures
+    regs, notes = compare(base, {"c": (1.0, "lower")}, threshold=0.25)
+    assert regs == [] and len(notes) == 3
+
+
+def test_extractor_shapes():
+    sc = _scenarios({"scenarios": [
+        {"scenario": "ring-edge", "us_per_round": 5308.1,
+         "rounds_per_s": 188.4}]})
+    assert sc == {"scenario_ring-edge_us": (5308.1, "lower")}
+    sv = _serving({"rows": [
+        {"n_slots": 4, "mode": "multi", "n_adapters": 8, "tok_s": 621.8}]})
+    assert sv == {"serving_s4_multi8_tok_s": (621.8, "higher")}
+    mh = _multihost({"rows": [{"n_processes": 2, "rounds_per_s": 3.5}]})
+    assert mh == {"multihost_2p_rounds_per_s": (3.5, "higher")}
+
+
+def test_gate_cli_end_to_end(tmp_path):
+    """Dir-vs-dir gate run: pass on equal artifacts, fail on a >25%
+    slowdown, and refuse a summary with failed benchmarks."""
+    base_dir, cur_dir = tmp_path / "base", tmp_path / "cur"
+    base_dir.mkdir()
+    cur_dir.mkdir()
+    doc = {"session_us_per_round": 6000.0}
+    (base_dir / "BENCH_round_loop.json").write_text(json.dumps(doc))
+    (cur_dir / "BENCH_round_loop.json").write_text(json.dumps(doc))
+    assert main(["--baseline-dir", str(base_dir),
+                 "--current-dir", str(cur_dir)]) == 0
+
+    slow = {"session_us_per_round": 9000.0}     # +50%
+    (cur_dir / "BENCH_round_loop.json").write_text(json.dumps(slow))
+    assert main(["--baseline-dir", str(base_dir),
+                 "--current-dir", str(cur_dir)]) == 1
+    # a generous threshold lets the same diff through
+    assert main(["--baseline-dir", str(base_dir),
+                 "--current-dir", str(cur_dir), "--threshold", "0.6"]) == 0
+
+    summary = cur_dir / "bench_summary.json"
+    summary.write_text(json.dumps(
+        [{"name": "kernels", "failed": True}]))
+    assert main(["--baseline-dir", str(base_dir),
+                 "--current-dir", str(cur_dir), "--threshold", "0.6",
+                 "--summary", str(summary)]) == 1
+
+
+def test_gate_artifact_scoping(tmp_path):
+    """--artifacts restricts the gate to what the job regenerated: a
+    regression in an out-of-scope artifact is ignored, an unknown name
+    is rejected."""
+    base_dir, cur_dir = tmp_path / "base", tmp_path / "cur"
+    base_dir.mkdir()
+    cur_dir.mkdir()
+    (base_dir / "BENCH_round_loop.json").write_text(
+        json.dumps({"session_us_per_round": 6000.0}))
+    (cur_dir / "BENCH_round_loop.json").write_text(
+        json.dumps({"session_us_per_round": 9000.0}))      # +50% regression
+    mh = {"rows": [{"n_processes": 2, "rounds_per_s": 3.5}]}
+    (base_dir / "BENCH_multihost.json").write_text(json.dumps(mh))
+    (cur_dir / "BENCH_multihost.json").write_text(json.dumps(mh))
+    args = ["--baseline-dir", str(base_dir), "--current-dir", str(cur_dir)]
+    assert main(args) == 1                                  # unscoped: fails
+    assert main(args + ["--artifacts", "BENCH_multihost.json"]) == 0
+    assert main(args + ["--artifacts", "BENCH_nope.json"]) == 2
+
+
+def test_gate_refuses_vacuous_pass(tmp_path):
+    """Zero artifacts checked (typo'd dirs, bench wrote elsewhere) must
+    fail — a gate that watched nothing cannot go green."""
+    empty_a, empty_b = tmp_path / "a", tmp_path / "b"
+    empty_a.mkdir()
+    empty_b.mkdir()
+    assert main(["--baseline-dir", str(empty_a),
+                 "--current-dir", str(empty_b)]) == 1
+
+
+def test_run_only_rejects_unknown_names():
+    """A typo'd --only must exit non-zero in milliseconds (validated
+    before the benchmark imports), not silently run nothing."""
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", "--only", "kernles"],
+        capture_output=True, text=True, cwd=ROOT,
+        env=dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src")))
+    assert proc.returncode == 2
+    assert "unknown benchmark" in proc.stderr
+    assert "kernles" in proc.stderr

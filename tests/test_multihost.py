@@ -1,0 +1,249 @@
+"""Multi-process execution tests.
+
+Two groups:
+  * tier-1 units — in-process, single-process-degenerate behaviour of the
+    multihost helpers, `BroadcastSchedule`, the `mix_gather` lowering, and
+    `ClusterSession` (which must be an exact `Session` on one process).
+  * `-m multihost` — tests that spawn a REAL simulated process grid via
+    `repro.launch.cluster` (CPU backend, gloo collectives) and assert the
+    acceptance bar: a 2-process `ClusterSession` reproduces the
+    single-process `Session` bit-for-bit, and checkpoints round-trip
+    across process counts with exact RNG replay. These run in the
+    dedicated `multihost` CI job.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.api import ClusterSession, DFLConfig, HistoryRecorder, Session
+from repro.checkpoint import load_pytree
+from repro.core.topology import make_topology
+from repro.dist import multihost, sharding
+from repro.launch.cluster import failed_ranks, spawn_simulated
+from repro.scenarios.schedule import BroadcastSchedule, GossipSchedule
+
+ENC_KW = dict(n_layers=1, d_model=32, n_heads=2, d_ff=64, vocab_size=256)
+
+
+def _clf_config(**kw):
+    base = dict(model="encoder", task="sst2", model_kw=ENC_KW, n_clients=4,
+                rounds=6, local_steps=2, batch_size=8, p=0.5, T=2,
+                lr=1e-3, seed=0)
+    base.update(kw)
+    return DFLConfig(**base)
+
+
+def _assert_trees_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# tier-1: helpers + degenerate single-process behaviour
+# ---------------------------------------------------------------------------
+
+def test_multihost_helpers_single_process():
+    assert not multihost.is_distributed()
+    assert multihost.is_primary()
+    assert multihost.process_count() == 1
+    mesh = multihost.cluster_mesh()
+    assert mesh.axis_names == ("data",)
+    slc = multihost.local_client_slice(8, mesh)
+    assert (slc.start, slc.stop) == (0, 8)
+
+    class _Grid9:                       # mesh stub: 9 devices
+        size = 9
+    with pytest.raises(ValueError):
+        multihost.local_client_slice(4, _Grid9())
+    # replicate / shard / gather round-trip exactly
+    x = np.arange(24, dtype=np.float32).reshape(4, 3, 2)
+    g = multihost.shard_clients(mesh, x[multihost.local_client_slice(4, mesh)],
+                                x.shape, axis=0)
+    np.testing.assert_array_equal(np.asarray(g), x)
+    r = multihost.replicate(mesh, x)
+    np.testing.assert_array_equal(np.asarray(r), x)
+    back = multihost.to_host({"x": g}, mesh)
+    np.testing.assert_array_equal(back["x"], x)
+    multihost.sync("noop")  # single-process barrier is a no-op
+
+
+def test_broadcast_schedule_passthrough_single_process():
+    """On one process the wrapper must not perturb the inner schedule's
+    stream — same matrices, same dtype, same RNG advancement."""
+    topo_a = make_topology("complete", 4, 0.5, seed=3)
+    topo_b = make_topology("complete", 4, 0.5, seed=3)
+    inner, wrapped = GossipSchedule(topo_a), \
+        BroadcastSchedule(GossipSchedule(topo_b))
+    assert wrapped.m == 4 and wrapped.symmetric is False
+    for t in range(5):
+        np.testing.assert_array_equal(inner.next_w(t), wrapped.next_w(t))
+
+
+def test_mix_gather_modes_and_key():
+    with pytest.raises(ValueError):
+        _clf_config(mix_gather="sometimes")
+    on, off = _clf_config(mix_gather="on"), _clf_config(mix_gather="off")
+    assert on.cache_key() != off.cache_key()
+    from repro.api.session import _resolve_mix_gather
+    assert _resolve_mix_gather("on") is True
+    assert _resolve_mix_gather("off") is False
+    # single-process "auto" resolves off
+    assert _resolve_mix_gather("auto") is (jax.process_count() > 1)
+
+
+def test_mix_gather_bitwise_noop_single_process():
+    """mix_gather pins the communication lowering; it must not change a
+    single bit of the single-process numerics."""
+    a = Session(_clf_config(rounds=3, mix_gather="off"))
+    b = Session(_clf_config(rounds=3, mix_gather="on"))
+    a.run()
+    b.run()
+    _assert_trees_equal(a.lora, b.lora)
+
+
+def test_cluster_session_degenerate_matches_session():
+    """A 1-process ClusterSession is an exact Session: same losses, same
+    final state, and no leaked mesh binding afterwards."""
+    assert sharding.current_mesh() is None
+    rec_c, rec_s = HistoryRecorder(), HistoryRecorder()
+    cs = ClusterSession(_clf_config(), callbacks=[rec_c])
+    cs.run()
+    assert sharding.current_mesh() is None      # _bound() restored state
+    ss = Session(_clf_config(), callbacks=[rec_s])
+    ss.run()
+    assert [h["loss"] for h in rec_c.history] == \
+        [h["loss"] for h in rec_s.history]
+    _assert_trees_equal(cs.lora, ss.lora)
+
+
+def test_cluster_checkpoint_interop_single_process(tmp_path):
+    """ClusterSession.save writes Session's exact checkpoint format."""
+    path = os.path.join(tmp_path, "cs.npz")
+    cs = ClusterSession(_clf_config())
+    cs.run(3)
+    cs.save(path)
+    cs.run(3)
+    resumed = Session(_clf_config())
+    assert resumed.restore(path) == 3
+    resumed.run(3)
+    _assert_trees_equal(cs.lora, resumed.lora)
+
+
+# ---------------------------------------------------------------------------
+# -m multihost: real simulated process grids (dedicated CI job)
+# ---------------------------------------------------------------------------
+
+def _spawn_ok(n, args, timeout=600.0):
+    results = spawn_simulated(n, args, timeout=timeout)
+    bad = failed_ranks(results)
+    assert not bad, "\n".join(report for _, report in bad)
+    return results
+
+
+@pytest.mark.multihost
+def test_two_process_parity_bitwise(tmp_path):
+    """THE acceptance bar: a 2-process simulated ClusterSession reproduces
+    the single-process Session's params bit-for-bit for the same
+    DFLConfig/seed — local training shard-local, W_t broadcast from rank
+    0, gossip mix through the cross-process all-gather."""
+    config = _clf_config()
+    cfg_path = os.path.join(tmp_path, "cfg.json")
+    ckpt = os.path.join(tmp_path, "cluster2.npz")
+    out_json = os.path.join(tmp_path, "cluster2.json")
+    with open(cfg_path, "w") as f:
+        json.dump(config.to_dict(), f)
+    _spawn_ok(2, ["--config", cfg_path, "--ckpt", ckpt,
+                  "--json", out_json, "--eval", "--quiet"])
+
+    rec = HistoryRecorder()
+    single = Session(config, callbacks=[rec])
+    single.run()
+
+    tree = load_pytree(ckpt)
+    _assert_trees_equal(tree["lora"], single.lora)
+    _assert_trees_equal(tree["opt"]["mu"], single.opt_state.mu)
+    payload = json.load(open(out_json))
+    assert payload["n_processes"] == 2
+    assert payload["final_loss"] == rec.history[-1]["loss"]
+    assert payload["mix_allgather_bytes_per_round"] > 0
+    # evaluate() works on the grid (global eval batch + sharded lora
+    # slices) and scores identically to the single-process run
+    assert payload["eval_acc"] == single.evaluate(n=64)["acc"]
+
+
+@pytest.mark.multihost
+def test_two_process_parity_adaptive_T(tmp_path):
+    """Adaptive-T parity: the online controller consumes the RAW W_t at
+    full precision, so the broadcast must be bit-exact (not a float32
+    shadow) or the two sides can pick different T at a decision boundary.
+    Guards the float64 byte-transport in `BroadcastSchedule`."""
+    config = _clf_config(adaptive_T=True, rounds=6)
+    cfg_path = os.path.join(tmp_path, "cfg.json")
+    ckpt = os.path.join(tmp_path, "adaptive2.npz")
+    with open(cfg_path, "w") as f:
+        json.dump(config.to_dict(), f)
+    _spawn_ok(2, ["--config", cfg_path, "--ckpt", ckpt, "--quiet"])
+
+    single = Session(config)
+    single.run()
+    _assert_trees_equal(load_pytree(ckpt)["lora"], single.lora)
+
+
+@pytest.mark.multihost
+def test_checkpoint_across_process_counts(tmp_path):
+    """Save under a 2-process ClusterSession, restore single-process:
+    params AND the replayed RNG streams must line up exactly — the
+    restored run continues bit-for-bit into the same final state as an
+    uninterrupted single-process run."""
+    config = _clf_config(rounds=6)
+    cfg_path = os.path.join(tmp_path, "cfg.json")
+    ckpt = os.path.join(tmp_path, "half.npz")
+    with open(cfg_path, "w") as f:
+        json.dump(config.to_dict(), f)
+    # 2-process grid runs the FIRST 3 rounds and checkpoints
+    _spawn_ok(2, ["--config", cfg_path, "--run-rounds", "3",
+                  "--ckpt", ckpt, "--quiet"])
+
+    # single-process restore: replays data/topology/schedule RNGs 0..2,
+    # then runs rounds 3..5
+    resumed = Session(config)
+    assert resumed.restore(ckpt) == 3
+    resumed.run(3)
+
+    # reference: uninterrupted single-process run of all 6 rounds
+    full = Session(config)
+    full.run()
+
+    assert resumed.t == full.t == 6
+    _assert_trees_equal(resumed.lora, full.lora)
+    _assert_trees_equal(resumed.opt_state.mu, full.opt_state.mu)
+    _assert_trees_equal(resumed.opt_state.nu, full.opt_state.nu)
+
+
+@pytest.mark.multihost
+def test_restore_into_two_process_grid(tmp_path):
+    """The reverse direction: a single-process checkpoint restores into a
+    2-process grid and continues to the same final state."""
+    config = _clf_config(rounds=6)
+    cfg_path = os.path.join(tmp_path, "cfg.json")
+    half = os.path.join(tmp_path, "half1p.npz")
+    done = os.path.join(tmp_path, "done2p.npz")
+    with open(cfg_path, "w") as f:
+        json.dump(config.to_dict(), f)
+
+    first = Session(config)
+    first.run(3)
+    first.save(half)
+
+    _spawn_ok(2, ["--config", cfg_path, "--restore", half,
+                  "--run-rounds", "3", "--ckpt", done, "--quiet"])
+
+    full = Session(config)
+    full.run()
+    _assert_trees_equal(load_pytree(done)["lora"], full.lora)
