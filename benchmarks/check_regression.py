@@ -15,7 +15,8 @@ Tracked metrics per artifact (direction-aware):
   BENCH_round_loop.json  session_us_per_round               (lower better)
   BENCH_scenarios.json   us_per_round per scenario          (lower better)
   BENCH_serving.json     tok_s per (n_slots, mode, n_adapters) (higher)
-  BENCH_multihost.json   rounds_per_s per process-grid size (higher)
+  BENCH_multihost.json   rounds_per_s per (mix_comm, grid size) and the
+                         within-mode scale_vs_1p at N>1       (higher)
 
 Baselines missing on either side are reported but never fail the gate
 (a NEW artifact has no baseline yet; deleting one is caught by review).
@@ -72,9 +73,23 @@ def _serving(doc) -> Metrics:
 
 
 def _multihost(doc) -> Metrics:
-    return {f"multihost_{row['n_processes']}p_rounds_per_s":
-            (float(row["rounds_per_s"]), "higher")
-            for row in doc.get("rows", [])}
+    out: Metrics = {}
+    for row in doc.get("rows", []):
+        n = row["n_processes"]
+        mode = row.get("mix_comm")
+        if mode is None:           # pre-mix_comm artifact (legacy baseline)
+            out[f"multihost_{n}p_rounds_per_s"] = (
+                float(row["rounds_per_s"]), "higher")
+            continue
+        out[f"multihost_{mode}_{n}p_rounds_per_s"] = (
+            float(row["rounds_per_s"]), "higher")
+        if n > 1 and "scale_vs_1p" in row:
+            # within-mode scaling efficiency: losing it means the sparse
+            # comm path stopped paying for itself, even if absolute
+            # rounds/s moved for unrelated reasons
+            out[f"multihost_{mode}_{n}p_scale_vs_1p"] = (
+                float(row["scale_vs_1p"]), "higher")
+    return out
 
 
 TRACKED: Dict[str, Callable] = {

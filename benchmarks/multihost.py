@@ -1,18 +1,36 @@
-"""Multi-process DFL throughput over a simulated process grid.
+"""Multi-process DFL throughput: dense vs topology-sparse vs overlapped.
 
 Spawns ``repro.launch.cluster --simulate N`` for N in {1, 2, 4} local CPU
-processes (gloo collectives) on one shared `DFLConfig` (m = 8 clients, the
-benchmark-harness classifier) and records each grid's rounds/s plus the
-per-round gossip collective payload (`mix_allgather_bytes_per_round` —
-what each process receives: the other processes' client shards of the
-stacked LoRA state). The result goes to BENCH_multihost.json as part of
-the repo's perf trajectory.
+processes (gloo collectives) for each ``mix_comm`` lowering on one shared
+`DFLConfig` (m = 8 clients on a static ring — the shape where sparse
+gossip matters). Per (mode, grid) row: steady-state rounds/s (compile and
+the first rounds excluded via ``--warmup``), the measured per-round
+collective payload (`comm_bytes_per_round`, with the dense and sparse
+figures side by side), and the final loss. ``scale_vs_1p`` is WITHIN-mode:
+rounds/s of the N-process grid over the same mode's 1-process grid, so it
+isolates the cost of running the real cross-process collective path
+against identical arithmetic.
 
-On a single CPU box the grids share the same silicon, so rounds/s is
-expected to *drop* as N grows — the point of the trajectory is the cost
-of the real cross-process collective path (spawn + gloo + all-gather),
-not a scaling claim; `scale_vs_1p` makes the ratio explicit and the CI
-regression gate pins it.
+On a single CPU box the grids share the same silicon, so scale_vs_1p ≤ 1
+by construction; the gap to 1.0 is pure multi-process overhead (gloo
+exchange + per-process dispatch + cache pressure). The sparse/overlap
+lowerings exist to shrink exactly that gap, and the CI regression gate
+pins both rounds/s and scale_vs_1p per (mode, grid).
+
+Parity columns: dense and sparse are bit-for-bit the SAME algorithm, so
+their final losses must agree across every grid AND with each other
+(`loss_parity_across_grids`); sparse_overlap is a different (one-round-
+delayed) algorithm whose semantics are process-count independent, so its
+losses must agree across grids but not with dense
+(`overlap_parity_across_grids`).
+
+``sparse_lowering`` probes the flat-vs-per-segment contraction choice of
+the sparse path in-process. The suspicion was that the dense path's
+TPU-only-flat heuristic is stale for sparse comm (the sparse path pays
+the flat buffer anyway, making the fused dot look free) — the probe
+measures the opposite on CPU, so `repro.core.mixing.sparse_use_flat`
+keeps the dense heuristic (flat exactly on TPU meshes), pinned by
+tests/test_comm.py::test_sparse_lowering_auto_pins_flat.
 """
 from __future__ import annotations
 
@@ -20,68 +38,149 @@ import argparse
 import json
 import os
 import tempfile
+import time
 
 PROC_GRID = (1, 2, 4)
+MODES = ("dense", "sparse", "sparse_overlap")
 M = 8
+WARMUP = 2
+
+# Heavy enough that a round's arithmetic dominates per-round dispatch
+# (local_steps=1 folds the whole local batch into one scan step — many
+# small steps quadruple the per-step dispatch cost at 4 processes).
+CONFIG = dict(
+    model="encoder", task="sst2",
+    model_kw={"n_layers": 2, "d_model": 128, "n_heads": 4, "d_ff": 256,
+              "vocab_size": 256},
+    n_clients=M, topology="ring", scenario="static",
+    local_steps=1, batch_size=64, p=0.5, T=2, lr=1e-3, seed=0,
+)
 
 
-def _worker_args(rounds: int, json_path: str) -> list:
-    return ["--preset", "classifier", "--clients", str(M),
-            "--rounds", str(rounds), "--local-steps", "2",
-            "--interval", "2", "--p", "0.5", "--seed", "0",
-            "--json", json_path, "--quiet"]
+def _run_grid(n: int, mode: str, rounds: int, tmp: str) -> dict:
+    from repro.launch.cluster import failed_ranks, spawn_simulated
+
+    cfg_path = os.path.join(tmp, f"cfg_{mode}_{n}.json")
+    out_path = os.path.join(tmp, f"grid_{mode}_{n}.json")
+    with open(cfg_path, "w") as f:
+        json.dump(dict(CONFIG, rounds=rounds, mix_comm=mode), f)
+    results = spawn_simulated(n, [
+        "--config", cfg_path, "--warmup", str(WARMUP),
+        "--json", out_path, "--quiet"])
+    failed = failed_ranks(results)
+    if failed:
+        raise RuntimeError(
+            f"{mode} {n}-process grid failed:\n" +
+            "\n".join(report for _, report in failed))
+    with open(out_path) as f:
+        return json.load(f)
+
+
+def _probe_sparse_lowering(reps: int = 30) -> dict:
+    """Time the sparse contraction's two lowerings in-process (1-shard
+    degenerate path — the contraction is identical code under shard_map).
+    Evidence for `sparse_use_flat`'s always-flat auto default."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core import mixing
+    from repro.core.topology import metropolis_weights, ring_graph
+
+    d, r = CONFIG["model_kw"]["d_model"], 4
+    key = jax.random.PRNGKey(0)
+    lora = {"layers": [
+        {"q": {"a": jax.random.normal(jax.random.fold_in(key, 4 * j),
+                                      (M, d, r)),
+               "b": jax.random.normal(jax.random.fold_in(key, 4 * j + 1),
+                                      (M, r, d))},
+         "v": {"a": jax.random.normal(jax.random.fold_in(key, 4 * j + 2),
+                                      (M, d, r)),
+               "b": jax.random.normal(jax.random.fold_in(key, 4 * j + 3),
+                                      (M, r, d))}}
+        for j in range(CONFIG["model_kw"]["n_layers"])]}
+    W = jnp.asarray(metropolis_weights(ring_graph(M)), jnp.float32)
+
+    out = {}
+    for lowering in ("flat", "per_segment"):
+        fn = jax.jit(lambda W, lo: mixing.mix_tree_sparse(
+            W, lo, 1.0, 1.0, comm_plan=None, flat_lowering=lowering))
+        jax.block_until_ready(fn(W, lora))       # compile
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            res = fn(W, lora)
+        jax.block_until_ready(res)
+        out[f"{lowering}_us"] = round(
+            (time.perf_counter() - t0) / reps * 1e6, 1)
+    out["winner"] = ("flat" if out["flat_us"] <= out["per_segment_us"]
+                     else "per_segment")
+    out["auto_resolves_to"] = ("flat" if mixing.sparse_use_flat("auto")
+                               else "per_segment")
+    return out
 
 
 def run(quick: bool = True, json_path: str | None = None) -> dict:
-    from repro.launch.cluster import failed_ranks, spawn_simulated
-
     rounds = 8 if quick else 24
     rows = []
     with tempfile.TemporaryDirectory() as tmp:
-        for n in PROC_GRID:
-            out = os.path.join(tmp, f"grid{n}.json")
-            results = spawn_simulated(n, _worker_args(rounds, out))
-            failed = failed_ranks(results)
-            if failed:
-                raise RuntimeError(
-                    f"{n}-process grid failed:\n" +
-                    "\n".join(report for _, report in failed))
-            with open(out) as f:
-                payload = json.load(f)
-            rows.append({
-                "n_processes": n,
-                "clients_per_process": payload["clients_per_process"],
-                "rounds_per_s": payload["rounds_per_s"],
-                "us_per_round": round(1e6 / payload["rounds_per_s"], 1),
-                "mix_allgather_bytes_per_round":
-                    payload["mix_allgather_bytes_per_round"],
-                "final_loss": payload["final_loss"],
-            })
+        for mode in MODES:
+            for n in PROC_GRID:
+                payload = _run_grid(n, mode, rounds, tmp)
+                rows.append({
+                    "n_processes": n,
+                    "mix_comm": mode,
+                    "clients_per_process": payload["clients_per_process"],
+                    "rounds_per_s": payload["rounds_per_s"],
+                    "us_per_round": round(1e6 / payload["rounds_per_s"], 1),
+                    "comm_bytes_per_round":
+                        payload["comm_bytes_per_round"],
+                    "dense_comm_bytes_per_round":
+                        payload["dense_comm_bytes_per_round"],
+                    "sparse_comm_bytes_per_round":
+                        payload["sparse_comm_bytes_per_round"],
+                    "final_loss": payload["final_loss"],
+                })
 
-    base_rps = rows[0]["rounds_per_s"]
+    # within-mode scaling: N-process rounds/s over the SAME mode at 1p
+    base = {row["mix_comm"]: row["rounds_per_s"]
+            for row in rows if row["n_processes"] == 1}
     for row in rows:
-        row["scale_vs_1p"] = round(row["rounds_per_s"] / base_rps, 3)
-    # every grid optimizes the same function from the same seed: the final
-    # losses must agree across process counts (parity smoke; the bitwise
-    # assertion lives in tests/test_multihost.py)
-    losses = {row["final_loss"] for row in rows}
-    parity = len(losses) == 1
+        row["scale_vs_1p"] = round(
+            row["rounds_per_s"] / base[row["mix_comm"]], 3)
+
+    # dense == sparse is an algorithm identity: one loss across both modes
+    # and every grid. sparse_overlap is delayed gossip: grid-invariant but
+    # legitimately different from dense.
+    exact = {row["final_loss"] for row in rows
+             if row["mix_comm"] in ("dense", "sparse")}
+    overlap = {row["final_loss"] for row in rows
+               if row["mix_comm"] == "sparse_overlap"}
+    parity = len(exact) == 1
+    overlap_parity = len(overlap) == 1
 
     result = {
         "backend": "cpu",
         "m": M,
         "rounds": rounds,
-        "preset": "classifier",
+        "warmup": WARMUP,
+        "topology": CONFIG["topology"],
+        "scenario": CONFIG["scenario"],
+        "config": dict(CONFIG, rounds=rounds),
         "loss_parity_across_grids": parity,
+        "overlap_parity_across_grids": overlap_parity,
+        "sparse_lowering": _probe_sparse_lowering(),
         "rows": rows,
     }
-    print("\n=== multi-process grids (simulated, gloo) ===")
-    print("n_proc,clients/proc,rounds_per_s,scale_vs_1p,allgather_B/round")
+    print("\n=== multi-process grids (simulated, gloo; static ring) ===")
+    print("mode,n_proc,rounds_per_s,scale_vs_1p,comm_B/round,dense_B/round")
     for row in rows:
-        print(f"{row['n_processes']},{row['clients_per_process']},"
+        print(f"{row['mix_comm']},{row['n_processes']},"
               f"{row['rounds_per_s']},{row['scale_vs_1p']},"
-              f"{row['mix_allgather_bytes_per_round']}")
-    print(f"loss parity across grids: {parity}")
+              f"{row['comm_bytes_per_round']},"
+              f"{row['dense_comm_bytes_per_round']}")
+    sl = result["sparse_lowering"]
+    print(f"sparse lowering probe: flat {sl['flat_us']}us vs per_segment "
+          f"{sl['per_segment_us']}us -> winner {sl['winner']}")
+    print(f"loss parity (dense==sparse, all grids): {parity}; "
+          f"overlap parity (grids only): {overlap_parity}")
     if json_path:
         # written BEFORE the parity check fails: on divergence the CI
         # artifact must carry the diverging run's rows, not a stale file
@@ -89,7 +188,11 @@ def run(quick: bool = True, json_path: str | None = None) -> dict:
             json.dump(result, f, indent=1)
         print(f"wrote {json_path}")
     if not parity:
-        raise RuntimeError(f"process grids diverged: losses {sorted(losses)}")
+        raise RuntimeError(
+            f"dense/sparse grids diverged: losses {sorted(exact)}")
+    if not overlap_parity:
+        raise RuntimeError(
+            f"sparse_overlap grids diverged: losses {sorted(overlap)}")
     return result
 
 

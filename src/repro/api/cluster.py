@@ -9,12 +9,20 @@ the grid (`repro.dist.multihost`):
 
   * each process owns a contiguous shard of the client axis (m must divide
     over the grid's devices); local training is shard-local,
-  * the gossip mix runs with ``mix_gather`` resolved on: one all-gather of
-    the stacked LoRA state per round (the paper's communication step,
-    lowered to a cross-process collective) followed by a replicated W_t
-    contraction — bitwise equal to the single-process round,
-  * `TopologySchedule` draws are wrapped in `BroadcastSchedule` so every
-    process mixes with rank 0's realized W_t,
+  * under ``mix_comm="dense"`` the gossip mix runs with ``mix_gather``
+    resolved on: one all-gather of the stacked LoRA state per round (the
+    paper's communication step, lowered to a cross-process collective)
+    followed by a replicated W_t contraction — bitwise equal to the
+    single-process round. Under ``mix_comm="sparse"/"sparse_overlap"``
+    the round instead runs the `repro.dist.comm.CommPlan` halo exchange:
+    one small all-gather of only the topology-coupled rows ("sparse" is
+    still bitwise equal; "sparse_overlap" delays neighbor terms one
+    round so the exchange overlaps local compute),
+  * `TopologySchedule` draws that do not declare ``deterministic`` are
+    wrapped in `BroadcastSchedule` so every process mixes with rank 0's
+    realized W_t; config-derived library schedules replay identically
+    per seed on every process and skip the per-round broadcast (a
+    blocking host collective that dominated small-payload rounds),
   * checkpoints gather to host and are written by rank 0 only, in the
     exact format `Session.save` writes — a 2-process run's checkpoint
     restores into a single-process `Session` (and vice versa).
@@ -66,10 +74,17 @@ class ClusterSession(Session):
         self._client_slc = multihost.local_client_slice(config.n_clients,
                                                         self.mesh)
         super().__init__(config, **kw)
-        # rank-0-owned W_t: all processes mix with the same realization
-        self.topo_schedule = BroadcastSchedule(self.topo_schedule)
+        self._wrap_schedule()
         self.base = multihost.replicate_tree(
             self.mesh, jax.tree.map(np.asarray, self.base))
+
+    def _wrap_schedule(self) -> None:
+        """Rank-0-owned W_t for schedules whose draws could disagree
+        across processes. Deterministic (config-derived) schedules replay
+        the identical stream per seed on every process, so the per-round
+        broadcast — a blocking host collective — is skipped for them."""
+        if not getattr(self.topo_schedule, "deterministic", False):
+            self.topo_schedule = BroadcastSchedule(self.topo_schedule)
 
     # -- mesh binding (trace-time logical-axis resolution) ------------------
     @contextmanager
@@ -162,6 +177,6 @@ class ClusterSession(Session):
         saved = super().restore(path)
         if self._user_topo_schedule is None:
             # super().restore rebuilt the schedule unwrapped
-            self.topo_schedule = BroadcastSchedule(self.topo_schedule)
+            self._wrap_schedule()
         self._globalize_state()
         return saved

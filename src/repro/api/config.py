@@ -34,8 +34,9 @@ TOPOLOGIES = GRAPH_FAMILIES
 MIX_IMPLS = ("planned", "per_leaf", "concat")
 FLAT_LOWERINGS = ("auto", "flat", "per_segment")
 MIX_GATHER_MODES = ("auto", "on", "off")
+MIX_COMM_MODES = ("dense", "sparse", "sparse_overlap")
 
-_KEY_VERSION = 4   # bump when semantics of any field change
+_KEY_VERSION = 5   # bump when semantics of any field change
 
 
 @dataclass(frozen=True)
@@ -73,9 +74,14 @@ class DFLConfig:
     # -- engine -------------------------------------------------------------
     mix_impl: str = "planned"
     mix_flat_lowering: str = "auto"   # auto = flat on TPU, per-segment off
-    mix_gather: str = "auto"     # all-gather clients before mixing:
-                                 # auto = on iff multi-process (bitwise
-                                 # cluster parity), "on"/"off" pin it
+    mix_gather: str = "auto"     # dense mode: all-gather clients before
+                                 # mixing: auto = on iff multi-process
+                                 # (bitwise cluster parity), "on"/"off"
+                                 # pin it (ignored by sparse modes)
+    mix_comm: str = "dense"      # gossip comm lowering: "dense" |
+                                 # "sparse" (topology-support exchange,
+                                 # bitwise equal) | "sparse_overlap"
+                                 # (one-round-delayed neighbor terms)
     donate: bool = False         # donate lora/opt buffers (in-place round)
 
     # -- seeds / data -------------------------------------------------------
@@ -131,6 +137,12 @@ class DFLConfig:
         check(self.mix_gather in MIX_GATHER_MODES,
               f"unknown mix_gather {self.mix_gather!r}; "
               f"known: {MIX_GATHER_MODES}")
+        check(self.mix_comm in MIX_COMM_MODES,
+              f"unknown mix_comm {self.mix_comm!r}; "
+              f"known: {MIX_COMM_MODES}")
+        check(self.mix_comm == "dense" or self.mix_impl == "planned",
+              f"mix_comm {self.mix_comm!r} lowers through the MixPlan "
+              f"flat layout; it requires mix_impl='planned'")
         check(self.n_clients >= 2, "n_clients must be >= 2")
         check(0.0 < self.p <= 1.0, "p must be in (0, 1]")
         check(self.rounds > 0, "rounds must be positive")

@@ -19,18 +19,28 @@ def build_round(loss_fn: Callable, optimizer: AdamW, *,
                 mix_impl: str = "planned",
                 mix_flat_lowering: Optional[str] = None,
                 mix_gather: bool = False,
+                mix_comm: str = "dense",
+                comm_plan=None,
                 donate: bool = False):
     """Build round_fn(base, lora, opt_state, batch, W, masks).
 
     mix_flat_lowering ("auto" | "flat" | "per_segment") pins the planned
     path's fused-buffer lowering for this round function; None defers to
     the process default (repro.core.mixing.set_flat_lowering).
-    mix_gather pins the cluster communication step: all-gather the client
-    axis before the mixing contraction (bitwise-parity lowering for
-    multi-process runs; no-op without a bound mesh).
+    mix_gather pins the dense cluster communication step: all-gather the
+    client axis before the mixing contraction (bitwise-parity lowering
+    for multi-process runs; no-op without a bound mesh).
+    mix_comm ("dense" | "sparse" | "sparse_overlap") selects the gossip
+    communication lowering; the sparse modes exchange only the
+    topology-coupled rows described by ``comm_plan`` (a
+    `repro.dist.comm.CommPlan`), and "sparse_overlap" delays the
+    off-diagonal mixing terms by one round so the exchange overlaps with
+    local compute.
     """
     return make_dfl_round(loss_fn, optimizer, local_steps=local_steps,
                           mix_impl=mix_impl,
                           mix_flat_lowering=mix_flat_lowering,
                           mix_gather=mix_gather,
+                          mix_comm=mix_comm,
+                          comm_plan=comm_plan,
                           donate=donate)

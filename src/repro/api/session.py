@@ -45,14 +45,29 @@ from repro.core.topology import Topology, make_topology, \
 from repro.data.synthetic import (eval_batch, federated_batches,
                                   label_skew_partitions, lm_token_stream,
                                   make_task)
+from repro.dist.comm import CommPlan, build_comm_plan
 from repro.optim.adamw import AdamW, AdamWState
 from repro.scenarios.library import estimate_rho_sq, schedule_from_config
-from repro.scenarios.schedule import TopologySchedule
+from repro.scenarios.schedule import TopologySchedule, schedule_support
 
 
 # ---------------------------------------------------------------------------
 # round events (lazy views handed to callbacks)
 # ---------------------------------------------------------------------------
+
+def _metric_loss(metrics: Mapping) -> float:
+    """The reported round loss: host-side reduction of the replicated
+    per-client loss vector, in one fixed order — bitwise identical on
+    every process grid. Falls back to the in-graph scalar (whose
+    cross-client reduction XLA may decompose differently per grid) for
+    round functions that predate `loss_per_client`."""
+    pc = metrics.get("loss_per_client") if hasattr(metrics, "get") else None
+    if pc is not None:
+        a = np.asarray(pc, np.float32)          # (local_steps, n)
+        return float(a.mean(axis=-1, dtype=np.float32)
+                      .mean(dtype=np.float32))
+    return float(metrics["loss"])
+
 
 class RoundEvent:
     """One round's outcome. Derived quantities are memoized properties so
@@ -82,7 +97,7 @@ class RoundEvent:
     @property
     def loss(self) -> float:
         if self._loss is None:
-            self._loss = float(self.metrics["loss"])
+            self._loss = _metric_loss(self.metrics)
         return self._loss
 
     def consensus(self) -> dict:
@@ -123,6 +138,7 @@ class _Built:
     opt: AdamW
     round_fn: Callable
     acc_fn: Optional[Callable]
+    comm_plan: Optional[CommPlan]
 
 
 _BUILD_CACHE: dict = {}
@@ -140,16 +156,32 @@ def _resolve_mix_gather(mode: str) -> bool:
     return jax.process_count() > 1
 
 
-def _build_key(cfg: DFLConfig):
+def _comm_plan_for(cfg: DFLConfig) -> Optional[CommPlan]:
+    """The sparse-exchange CommPlan a config describes (None for dense).
+
+    The union support comes from a FRESH config-derived schedule replica
+    (support is static — probing it consumes no RNG the round loop owns),
+    compiled against the process grid's total device count. One shard
+    (single process, CPU) degenerates to a local contraction."""
+    if cfg.mix_comm == "dense":
+        return None
+    support = schedule_support(schedule_from_config(cfg))
+    return build_comm_plan(support, n_shards=jax.device_count())
+
+
+def _build_key(cfg: DFLConfig, comm_plan: Optional[CommPlan] = None):
     return (cfg.model, cfg.reduced, cfg.model_kw, cfg.task,
             cfg.feature_shift, cfg.n_clients, cfg.lr, cfg.local_steps,
             cfg.mix_impl, cfg.mix_flat_lowering,
-            _resolve_mix_gather(cfg.mix_gather), cfg.donate, cfg.init_seed)
+            _resolve_mix_gather(cfg.mix_gather), cfg.donate, cfg.init_seed,
+            cfg.mix_comm,
+            comm_plan.signature() if comm_plan is not None else None)
 
 
 def _build(cfg: DFLConfig, model_cfg, loss_fn) -> _Built:
     cacheable = model_cfg is None and loss_fn is None
-    key = _build_key(cfg)
+    comm_plan = _comm_plan_for(cfg)
+    key = _build_key(cfg, comm_plan)
     if cacheable and key in _BUILD_CACHE:
         return _BUILD_CACHE[key]
 
@@ -168,10 +200,11 @@ def _build(cfg: DFLConfig, model_cfg, loss_fn) -> _Built:
         base = tf.init_params(base_key, mc)
         if loss_fn is None:
             def loss_fn(bp, lo, micro, _cfg=mc):
-                return tf.lm_loss(bp, _cfg, micro["tokens"],
-                                  micro["targets"],
-                                  frontend=micro.get("frontend"),
-                                  lora=lo)[0]
+                out, per = tf.lm_loss(bp, _cfg, micro["tokens"],
+                                      micro["targets"],
+                                      frontend=micro.get("frontend"),
+                                      lora=lo, per_client=True)
+                return out[0], per
     else:
         from repro.models.classifier import (classifier_accuracy,
                                              classifier_loss, encoder_config,
@@ -185,7 +218,8 @@ def _build(cfg: DFLConfig, model_cfg, loss_fn) -> _Built:
         if loss_fn is None:
             def loss_fn(bp, lo, micro, _cfg=mc):
                 return classifier_loss(bp, _cfg, micro["tokens"],
-                                       micro["labels"], lora=lo)
+                                       micro["labels"], lora=lo,
+                                       per_client=True)
         acc_fn = jax.jit(lambda bp, toks, labs, lo, _cfg=mc:
                          classifier_accuracy(bp, _cfg, toks, labs, lora=lo))
 
@@ -195,12 +229,15 @@ def _build(cfg: DFLConfig, model_cfg, loss_fn) -> _Built:
                            mix_impl=cfg.mix_impl,
                            mix_flat_lowering=cfg.mix_flat_lowering,
                            mix_gather=_resolve_mix_gather(cfg.mix_gather),
+                           mix_comm=cfg.mix_comm,
+                           comm_plan=comm_plan,
                            donate=cfg.donate)
     if not cfg.donate:
         round_fn = jax.jit(round_fn)
 
     built = _Built(model_cfg=mc, task=task, base=base, lora0=lora0,
-                   opt=opt, round_fn=round_fn, acc_fn=acc_fn)
+                   opt=opt, round_fn=round_fn, acc_fn=acc_fn,
+                   comm_plan=comm_plan)
     if cacheable:
         _BUILD_CACHE[key] = built
     return built
@@ -242,6 +279,7 @@ class Session:
         self.round_fn = built.round_fn
         self._acc_fn = built.acc_fn
         self._lora0 = built.lora0
+        self.comm_plan = built.comm_plan    # None for mix_comm="dense"
 
         # the underlying graph + legacy sampler stay exposed as
         # `session.topology`; the round loop itself draws W_t from the
@@ -254,6 +292,18 @@ class Session:
         self.topo_schedule: TopologySchedule = topology_schedule \
             if topology_schedule is not None \
             else schedule_from_config(config, topology=self.topology)
+        if self.comm_plan is not None and topology_schedule is not None:
+            # the sparse exchange only moves rows inside the CONFIG's
+            # support; a user schedule coupling rows outside it would
+            # silently mix against zeros
+            extra = schedule_support(topology_schedule) \
+                & ~self.comm_plan.support
+            if extra.any():
+                raise ValueError(
+                    "topology_schedule couples clients outside the "
+                    "config-derived support the sparse CommPlan was "
+                    "compiled for; use mix_comm='dense' or align the "
+                    "schedule's support_adjacency() with the config")
         self._rho: Optional[float] = None
         self._T: Optional[int] = config.T or None
         self._user_schedule = schedule
@@ -407,7 +457,7 @@ class Session:
             self._one_round(is_last=(self.t == end - 1), notify=True)
         jax.block_until_ready(self.lora)
         wall = time.time() - t0
-        final = float(self.last_metrics["loss"]) \
+        final = _metric_loss(self.last_metrics) \
             if self.last_metrics is not None else float("nan")
         result = RunResult(rounds=n, wall_s=wall, final_loss=final,
                            T=getattr(self.schedule, "T", self.T))

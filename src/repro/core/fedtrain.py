@@ -22,7 +22,7 @@ import jax.numpy as jnp
 
 from repro.core import mixing
 from repro.core.lora import shard_lora_tree
-from repro.dist.sharding import gather_clients, logical
+from repro.dist.sharding import gather_clients, replicated
 from repro.optim.adamw import AdamW, AdamWState
 
 
@@ -40,16 +40,23 @@ _MIX_IMPLS = {
     "concat": mixing.mix_tree_concat,      # legacy fused (no plan cache)
 }
 
+MIX_COMM_MODES = ("dense", "sparse", "sparse_overlap")
+
 
 def make_dfl_round(loss_fn: Callable, optimizer: AdamW, *,
                    local_steps: int = 1,
                    mix_impl: str = "planned",
                    mix_flat_lowering: Optional[str] = None,
                    mix_gather: bool = False,
+                   mix_comm: str = "dense",
+                   comm_plan=None,
                    donate: bool = False):
     """Build the jit-able round function.
 
-    loss_fn(base_params, lora, microbatch) -> scalar loss
+    loss_fn(base_params, lora, microbatch) -> scalar loss, or
+      (scalar loss, per_client_vec) — the vector (shard-local entries)
+      is surfaced as metrics["loss_per_client"] for grid-invariant loss
+      reporting; scalar-only loss_fns report through a length-1 vector.
       microbatch carries the per-client batch (leading client axis matching
       the LoRA client axis).
 
@@ -71,10 +78,24 @@ def make_dfl_round(loss_fn: Callable, optimizer: AdamW, *,
     arithmetic is bitwise equal to the single-process round (GSPMD is
     otherwise free to pick a psum decomposition with a different
     reduction order). Off-mesh it is a no-op.
+    ``mix_comm`` selects the cluster communication lowering of the mixing
+    step: "dense" keeps the full-support contraction (optionally behind
+    the ``mix_gather`` all-gather); "sparse" exchanges only the rows the
+    topology's support couples (``comm_plan`` — a
+    `repro.dist.comm.CommPlan` — is required under a multi-device mesh),
+    bit-for-bit equal to dense; "sparse_overlap" additionally feeds the
+    off-diagonal terms the ROUND-INPUT state (one-round-delayed gossip),
+    so the halo exchange overlaps with the local steps.
     With ``donate`` the returned function is jitted with the lora/opt_state
     buffers donated (in-place round at production scale) — callers must
     then treat the passed-in trees as consumed.
     """
+    if mix_comm not in MIX_COMM_MODES:
+        raise ValueError(f"unknown mix_comm {mix_comm!r}; "
+                         f"known: {MIX_COMM_MODES}")
+    if mix_comm != "dense" and mix_impl != "planned":
+        raise ValueError("sparse mix_comm lowers through the MixPlan flat "
+                         "layout; it requires mix_impl='planned'")
     mix = _MIX_IMPLS[mix_impl]
     if mix_impl == "planned":
         mix = partial(mixing.mix_tree_planned,
@@ -85,21 +106,45 @@ def make_dfl_round(loss_fn: Callable, optimizer: AdamW, *,
 
         def local_step(carry, micro):
             lo, opt = carry
-            loss, grads = jax.value_and_grad(
-                lambda l: loss_fn(base_params, l, micro))(lo)
+
+            def objective(l):
+                # loss_fn may return (scalar, per_client_vec); the vector
+                # rides along as aux so the loss can be re-reduced in a
+                # grid-invariant order on host (scalar-only loss_fns get
+                # a length-1 vector — reporting then equals the scalar)
+                out = loss_fn(base_params, l, micro)
+                if isinstance(out, tuple):
+                    return out
+                return out, jnp.reshape(out, (1,))
+
+            (loss, per), grads = jax.value_and_grad(
+                objective, has_aux=True)(lo)
             lo, opt = optimizer.update(grads, opt, lo, update_mask=mask_fn)
             lo = shard_lora_tree(lo)
-            return (lo, opt), loss
+            return (lo, opt), (loss, per)
 
-        (lora_new, opt_new), losses = jax.lax.scan(
+        (lora_new, opt_new), (losses, per_client) = jax.lax.scan(
             local_step, (lora, opt_state), batch)
 
         # Joint mixing (Algorithm 1 lines 7–9): masks select per method.
-        if mix_gather:
-            lora_new = gather_clients(lora_new)
-        lora_new = mix(W, lora_new, masks[2], masks[3])
+        if mix_comm == "dense":
+            if mix_gather:
+                lora_new = gather_clients(lora_new)
+            lora_new = mix(W, lora_new, masks[2], masks[3])
+        else:
+            # overlap feeds the ROUND-INPUT state to the off-diagonal
+            # terms: its exchange is independent of the local-steps scan
+            lora_new = mixing.mix_tree_sparse(
+                W, lora_new, masks[2], masks[3], comm_plan=comm_plan,
+                lora_prev=(lora if mix_comm == "sparse_overlap" else None),
+                flat_lowering=mix_flat_lowering)
         lora_new = shard_lora_tree(lora_new)
-        metrics = {"loss": jnp.mean(losses), "loss_per_step": losses}
+        # loss_per_client (local_steps, n) is replicated so every process
+        # can host-read it: the session reduces it in ONE fixed order, so
+        # the reported loss is bitwise identical across process grids
+        # (the in-graph scalars may reduce in a grid-dependent order)
+        metrics = {"loss": jnp.mean(losses), "loss_per_step": losses,
+                   "loss_per_client": replicated(per_client)}
         return lora_new, opt_new, metrics
 
     if donate:

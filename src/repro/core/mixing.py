@@ -10,7 +10,7 @@ by GSPMD to collectives over the client axis.
 is mixed when its mask is 1, left untouched when 0 (traced scalars, so the
 method/phase never triggers recompilation).
 
-Three lowerings, equal numerics:
+Four lowerings, equal numerics (bit-for-bit at binary masks):
   mix_tree         — per-leaf einsum + blend (the oracle; one collective
                      per leaf under GSPMD).
   mix_tree_concat  — legacy fused variant: re-derives the flatten layout
@@ -24,6 +24,22 @@ Three lowerings, equal numerics:
                      (one collective under GSPMD, unequal masks folded
                      into the per-segment W_eff), and one unflatten — no
                      per-round Python tree traversal.
+  mix_tree_sparse  — the cluster communication lowering
+                     (`mix_comm="sparse"/"sparse_overlap"`): the same
+                     MixPlan flat layout, but the cross-process exchange
+                     moves ONLY the rows the topology's support couples
+                     (a `repro.dist.comm.CommPlan`), inside one
+                     shard_map region — one small halo all-gather per
+                     round instead of per-leaf full-axis all-gathers.
+                     Missing rows stay zero and meet exact-zero W
+                     entries, so the sparse result equals the dense
+                     contraction bit-for-bit. With ``lora_prev`` the
+                     off-diagonal terms read the PREVIOUS round's state
+                     (one-round-delayed/overlapped gossip, DeCAF-style):
+                     the halo has no data dependency on this round's
+                     local steps, so XLA can overlap communication with
+                     compute; only the diagonal stays fresh, making the
+                     semantics independent of the process count.
 """
 from __future__ import annotations
 
@@ -35,6 +51,8 @@ import numpy as np
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
 
 from repro.kernels import ops
 
@@ -273,3 +291,184 @@ def mix_tree_planned(W: jax.Array, lora, mask_a, mask_b, *,
         for slot, leaf in zip(plan.slots, leaves)
     ]
     return jax.tree_util.tree_unflatten(plan.treedef, out)
+
+
+# ===========================================================================
+# Sparse (neighbor-only) gossip lowering — repro.dist.comm.CommPlan
+# ===========================================================================
+
+def sparse_use_flat(mode: Optional[str] = None) -> bool:
+    """Resolve the contraction lowering for the SPARSE comm path.
+
+    Explicit "flat"/"per_segment" pin it; "auto"/None follow the dense
+    planned path's backend heuristic (flat on TPU meshes, per-segment
+    dots elsewhere). The plausible counter-argument — the sparse path
+    assembles the flat (m, cols) buffer anyway for the halo exchange, so
+    one fused (rows, m) @ (m, cols) dot should win everywhere — was
+    MEASURED FALSE on CPU: the per-column seg blend of the flat
+    contraction costs more than it saves over per-slot dots with scalar
+    blends (~110us vs ~70us at the bench shape,
+    BENCH_multihost.json's `sparse_lowering` probe), and inside a real
+    distributed round either choice is <0.1% of round wall time. Pinned
+    by tests/test_comm.py::test_sparse_lowering_auto_pins_flat (flat
+    exactly where the fused gossip kernel lives — TPU).
+    """
+    mode = mode if mode is not None else flat_lowering_mode()
+    if mode == "flat":
+        return True
+    if mode == "per_segment":
+        return False
+    if mode != "auto":
+        raise ValueError(f"unknown flat-lowering mode {mode!r}; "
+                         f"known: {_FLAT_LOWERING_MODES}")
+    return jax.default_backend() == "tpu"
+
+
+def _flat_buffer(leaves, m: int):
+    """(m, cols) unpadded flat view of the stacked tree (plan layout).
+    The sparse path skips the bp padding — it contracts with plain dots,
+    not the stripe-aligned gossip_mix kernel, and the halo exchange
+    should not ship padding bytes."""
+    return jnp.concatenate(
+        [jnp.moveaxis(x, -3, 0).reshape(m, -1) for x in leaves], axis=1)
+
+
+def _split_diag(w_rows, row0):
+    """(w_off_rows, w_diag) of mixing rows [row0, row0+r): the diagonal
+    coefficient per row, and the rows with the diagonal zeroed. Shared by
+    the degenerate and shard_map paths so both reduce identically."""
+    r, m = w_rows.shape
+    row = jax.lax.broadcasted_iota(jnp.int32, (r, m), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (r, m), 1)
+    eye = (col == row + row0).astype(w_rows.dtype)
+    w_diag = jnp.sum(w_rows * eye, axis=1, keepdims=True)
+    return w_rows * (1.0 - eye), w_diag
+
+
+def _sparse_contract(w_rows, x_rows, z, mask_a, mask_b, plan: MixPlan,
+                     use_flat: bool, w_diag=None):
+    """Blend-mixed rows from the exchanged source buffer.
+
+    w_rows: (r, m) mixing rows (diagonal zeroed when w_diag is given);
+    x_rows: (r, cols) fresh locally-owned rows; z: (m, cols) source rows
+    (fresh for plain sparse, previous-round for overlap; rows outside the
+    support are zero and meet exact-zero W entries). w_diag: (r, 1)
+    diagonal coefficients applied to the FRESH rows (overlap mode).
+    """
+    if use_flat:
+        mixed = w_rows @ z
+        if w_diag is not None:
+            mixed = w_diag * x_rows + mixed
+        seg = plan.segment_mask(mask_a, mask_b)[:, :plan.cols]
+        seg = seg.astype(x_rows.dtype)
+        return seg * mixed + (1.0 - seg) * x_rows
+    outs = []
+    for slot in plan.slots:
+        sl = slice(slot.offset, slot.offset + slot.cols)
+        mask = mask_a if slot.is_a else mask_b
+        mixed = w_rows @ z[:, sl]
+        if w_diag is not None:
+            mixed = w_diag * x_rows[:, sl] + mixed
+        outs.append(mask * mixed + (1.0 - mask) * x_rows[:, sl])
+    return jnp.concatenate(outs, axis=1)
+
+
+def mix_tree_sparse(W: jax.Array, lora, mask_a, mask_b, *, comm_plan,
+                    lora_prev=None, plan: Optional[MixPlan] = None,
+                    flat_lowering: Optional[str] = None):
+    """Neighbor-only gossip mixing on the MixPlan flat layout.
+
+    Without a bound multi-device mesh (or with a 1-shard ``comm_plan``)
+    this is the degenerate local contraction — bit-for-bit what the
+    distributed path computes, so single- and multi-process runs agree
+    exactly. Under a bound cluster mesh whose size matches
+    ``comm_plan.n_shards``, one shard_map region per round: each shard
+    gathers its export rows, ONE all-gather moves the (n, k, cols) halo,
+    rows scatter into a zero (m, cols) source buffer, and the shard's W
+    rows contract against it. W entries outside the support are exact
+    zeros (Metropolis construction), so zero-filled missing rows never
+    contribute a bit of difference.
+
+    ``lora_prev`` switches on one-round-delayed (overlapped) mixing: the
+    exchanged/off-diagonal source rows come from the ROUND-INPUT state
+    while each client's own (diagonal) contribution stays fresh —
+    y_i = seg·(W_ii·post_i + Σ_{j≠i} W_ij·pre_j) + (1−seg)·post_i.
+    The halo then has no data dependency on this round's local steps
+    (XLA overlaps it with compute), and the semantics are independent of
+    the process count — the staleness penalty is bounded against Lemma
+    A.10 in the conformance tier, not swept under parity.
+    """
+    from repro.dist import sharding as _sharding
+    plan = plan if plan is not None else get_mix_plan(lora)
+    leaves = jax.tree_util.tree_leaves(lora)
+    m = plan.m
+    use_flat = sparse_use_flat(flat_lowering)
+
+    flat = _flat_buffer(leaves, m)
+    prev_flat = None
+    if lora_prev is not None:
+        prev_flat = _flat_buffer(jax.tree_util.tree_leaves(lora_prev), m)
+
+    mesh = _sharding.current_mesh()
+    distributed = (mesh is not None and mesh.size > 1
+                   and comm_plan is not None
+                   and comm_plan.n_shards == mesh.size
+                   and len(mesh.axis_names) == 1)
+    if distributed:
+        mixed = _exchange_and_mix(W, flat, prev_flat, mask_a, mask_b,
+                                  plan, comm_plan, mesh, use_flat)
+    else:
+        w_rows = W.astype(flat.dtype)
+        if prev_flat is not None:
+            w_rows, w_diag = _split_diag(w_rows, 0)
+            mixed = _sparse_contract(w_rows, flat, prev_flat, mask_a,
+                                     mask_b, plan, use_flat, w_diag)
+        else:
+            mixed = _sparse_contract(w_rows, flat, flat, mask_a, mask_b,
+                                     plan, use_flat)
+
+    out = []
+    for slot, leaf in zip(plan.slots, leaves):
+        chunk = mixed[:, slot.offset:slot.offset + slot.cols]
+        restored = chunk.reshape(m, *slot.lead, *slot.tail)
+        restored = jnp.moveaxis(restored, 0, len(slot.lead))
+        out.append(restored.astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(plan.treedef, out)
+
+
+def _exchange_and_mix(W, flat, prev_flat, mask_a, mask_b, plan: MixPlan,
+                      cp, mesh, use_flat: bool):
+    """The distributed body: halo exchange + contraction in ONE shard_map
+    region, so the per-process divergent intermediates (export rows, the
+    reconstruction buffer) never exist as replicated-but-different global
+    arrays. Output rows are client-sharded, matching the round's layout."""
+    axis = mesh.axis_names[0]
+    n, m, m_loc, k = cp.n_shards, cp.m, cp.m_loc, cp.k
+    exp_local = jnp.asarray(cp.export_local)      # (n, k) int32
+    exp_global = jnp.asarray(cp.export_global)    # (n*k,) int32
+    overlap = prev_flat is not None
+
+    def body(w, x_blk, ma, mb, *rest):
+        pid = jax.lax.axis_index(axis)
+        src_blk = rest[0] if overlap else x_blk   # rows this shard offers
+        z = jnp.zeros((m, x_blk.shape[-1]), x_blk.dtype)
+        if k > 0:
+            exp = jnp.take(src_blk, exp_local[pid], axis=0)   # (k, cols)
+            halo = jax.lax.all_gather(exp, axis)              # (n, k, cols)
+            z = z.at[exp_global].set(halo.reshape(n * k, -1))
+        z = jax.lax.dynamic_update_slice(z, src_blk, (pid * m_loc, 0))
+        w_rows = jax.lax.dynamic_slice(w, (pid * m_loc, 0), (m_loc, m))
+        w_diag = None
+        if overlap:
+            w_rows, w_diag = _split_diag(w_rows, pid * m_loc)
+        return _sparse_contract(w_rows, x_blk, z, ma, mb, plan, use_flat,
+                                w_diag)
+
+    in_specs = [P(), P(axis, None), P(), P()]
+    args = [W.astype(flat.dtype), flat, mask_a, mask_b]
+    if overlap:
+        in_specs.append(P(axis, None))
+        args.append(prev_flat)
+    fn = shard_map(body, mesh=mesh, in_specs=tuple(in_specs),
+                   out_specs=P(axis, None), check_rep=False)
+    return fn(*args)

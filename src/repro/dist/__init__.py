@@ -8,7 +8,14 @@ Model and launch code never name mesh axes directly.
 initialization (`jax.distributed`), the cluster mesh, client-axis
 ownership, and exact host<->global array movement (replicate /
 shard_clients / fully_replicated). `repro.api.ClusterSession` sits on it.
-"""
-from repro.dist import multihost, sharding
 
-__all__ = ["sharding", "multihost"]
+``repro.dist.comm`` compiles a topology's union support against the
+process grid into a `CommPlan` — the static neighbor-only exchange the
+sparse gossip lowering (`mix_comm="sparse"/"sparse_overlap"`) runs
+instead of the dense client-axis all-gather.
+"""
+from repro.dist import comm, multihost, sharding
+from repro.dist.comm import CommPlan, build_comm_plan, dense_recv_bytes
+
+__all__ = ["sharding", "multihost", "comm", "CommPlan", "build_comm_plan",
+           "dense_recv_bytes"]

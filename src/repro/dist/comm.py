@@ -1,0 +1,135 @@
+"""`CommPlan` — topology-derived sparse communication plans for gossip.
+
+The dense cluster lowering (``mix_gather``) all-gathers the full stacked
+client axis every round regardless of how sparse W_t is — O(m) rows per
+process even when a ring couples only O(degree) neighbors. This module
+compiles the *union support* of a `TopologySchedule`'s mixing matrices
+(every (i, j) any W_t of the run can make nonzero) against the process
+grid into a static exchange plan:
+
+  * ``needed``  — which remote client rows each shard's W rows touch,
+  * ``export``  — which locally-owned rows any other shard needs,
+  * a rectangular ``(n_shards, k)`` export index table (k = the max
+    export count, shards with fewer rows pad with local row 0 — a real
+    row, so the padded exchange carries only true values),
+  * per-shard send/recv peer sets (the gossip neighborhoods), and
+  * exact per-round byte accounting for both the dense and the sparse
+    exchange.
+
+The plan is *data* for `repro.core.mixing.mix_tree_sparse`: inside one
+``shard_map`` region each shard gathers its export rows, one small
+all-gather moves the ``(n_shards, k, cols)`` halo (on gloo/CPU; a TPU
+mesh lowers the same op to collective-permute traffic on the torus),
+rows land in a zero-initialized (m, cols) source buffer, and the local
+W rows contract against it. Rows outside the support multiply exact
+zero weights, so the sparse result equals the dense contraction
+bit-for-bit on static graphs (see tests/test_comm.py).
+
+Layering: this module knows nothing about schedules — callers hand it a
+support adjacency (`repro.scenarios.schedule.schedule_support` derives
+one from any library `TopologySchedule`).
+"""
+from __future__ import annotations
+
+import hashlib
+from dataclasses import dataclass
+from typing import Tuple
+
+import numpy as np
+
+
+@dataclass(frozen=True, eq=False)
+class CommPlan:
+    """Static sparse-exchange plan of one (support, process-grid) pair."""
+
+    m: int                      # global clients
+    n_shards: int               # process-grid shards of the client axis
+    m_loc: int                  # clients per shard (m / n_shards)
+    k: int                      # export rows per shard (padded, uniform)
+    export_local: np.ndarray    # (n_shards, k) int32 local row indices
+    export_global: np.ndarray   # (n_shards*k,) int32 global row ids
+    support: np.ndarray         # (m, m) bool union support (incl. diag)
+    send_peers: Tuple[tuple, ...]   # per shard: shards reading its rows
+    recv_peers: Tuple[tuple, ...]   # per shard: shards it reads rows from
+
+    @property
+    def cross_edges(self) -> int:
+        """Support entries that cross a shard boundary (the rows moved)."""
+        owner = np.arange(self.m) // self.m_loc
+        return int(np.count_nonzero(
+            self.support & (owner[:, None] != owner[None, :])))
+
+    def sparse_recv_bytes(self, cols: int, itemsize: int = 4) -> int:
+        """Per-round bytes one process RECEIVES under the sparse halo
+        exchange: the other shards' export rows of the (m, cols) flat
+        mixing buffer. 0 on a single shard."""
+        if self.n_shards <= 1:
+            return 0
+        return itemsize * cols * self.k * (self.n_shards - 1)
+
+    def signature(self) -> str:
+        """Stable hex id of (support, grid) — build-cache key material."""
+        h = hashlib.md5()
+        h.update(np.ascontiguousarray(self.support, np.uint8).tobytes())
+        h.update(f"/{self.m}/{self.n_shards}".encode())
+        return h.hexdigest()[:16]
+
+
+def dense_recv_bytes(m: int, n_shards: int, cols: int,
+                     itemsize: int = 4) -> int:
+    """Per-round bytes one process RECEIVES under the dense ``mix_gather``
+    lowering: every other shard's client rows of the stacked LoRA state
+    (cols = columns per client of the flat layout). 0 on a single shard."""
+    if n_shards <= 1:
+        return 0
+    return itemsize * cols * (m - m // n_shards)
+
+
+def build_comm_plan(support: np.ndarray, n_shards: int) -> CommPlan:
+    """Compile a union-support adjacency against an ``n_shards`` grid.
+
+    ``support[i, j]`` truthy means some W_t of the run may weight client
+    j's state into client i's mix. The diagonal is always added (a client
+    keeps its own state), and ownership is the contiguous process-major
+    block layout of `repro.dist.multihost.local_client_slice`.
+    """
+    sup = np.asarray(support)
+    if sup.ndim != 2 or sup.shape[0] != sup.shape[1]:
+        raise ValueError(f"support must be square, got {sup.shape}")
+    m = sup.shape[0]
+    if n_shards < 1 or m % n_shards != 0:
+        raise ValueError(f"client axis {m} must divide over {n_shards} "
+                         f"shards")
+    sup = (sup != 0)
+    np.fill_diagonal(sup, True)
+    m_loc = m // n_shards
+    owner = np.arange(m) // m_loc
+
+    needed = []      # per shard: remote global rows its W rows read
+    for p in range(n_shards):
+        cols = np.flatnonzero(sup[p * m_loc:(p + 1) * m_loc].any(axis=0))
+        needed.append([int(j) for j in cols if owner[j] != p])
+    export = [sorted({j for q in range(n_shards) if q != p
+                      for j in needed[q] if owner[j] == p})
+              for p in range(n_shards)]
+
+    k = max((len(e) for e in export), default=0)
+    export_local = np.zeros((n_shards, k), np.int32)
+    export_global = np.zeros(n_shards * k, np.int32)
+    for p, rows in enumerate(export):
+        if k == 0:
+            break
+        # pad with local row 0: a real row, so padded slots carry true
+        # values and the duplicate scatter writes are value-identical
+        padded = rows + [p * m_loc] * (k - len(rows))
+        export_local[p] = np.asarray(padded, np.int32) - p * m_loc
+        export_global[p * k:(p + 1) * k] = padded
+
+    recv = tuple(tuple(sorted({int(owner[j]) for j in needed[p]}))
+                 for p in range(n_shards))
+    send = tuple(tuple(sorted({q for q in range(n_shards)
+                               if p in recv[q]}))
+                 for p in range(n_shards))
+    return CommPlan(m=m, n_shards=n_shards, m_loc=m_loc, k=k,
+                    export_local=export_local, export_global=export_global,
+                    support=sup, send_peers=send, recv_peers=recv)

@@ -16,10 +16,11 @@ is how CI exercises the whole multi-process path headless:
   PYTHONPATH=src python -m repro.launch.cluster --simulate 2 \\
       --preset classifier --rounds 6 --clients 4 --json out.json
 
-The worker JSON records the cluster perf surface: rounds/s, the analytic
-gossip all-gather payload per round (`mix_allgather_bytes_per_round` —
-what each process *receives*: the other processes' client shards of the
-stacked LoRA state), and the final loss, so tests and
+The worker JSON records the cluster perf surface: rounds/s, the
+per-round gossip payload measured from the live session's plans
+(`comm_bytes_per_round` — the exact bytes each process *receives* from
+the collectives the round actually issues, with the dense and sparse
+figures both reported for comparison), and the final loss, so tests and
 ``benchmarks/multihost.py`` share one measurement path.
 """
 from __future__ import annotations
@@ -52,18 +53,37 @@ def _preset_config(args) -> dict:
     cfg.update(n_clients=args.clients, topology=args.topology, p=args.p,
                scenario=args.scenario, method=args.method, T=args.interval,
                rounds=args.rounds, local_steps=args.local_steps,
-               lr=args.lr, seed=args.seed)
+               lr=args.lr, seed=args.seed, mix_comm=args.mix_comm)
     return cfg
 
 
-def _mix_allgather_bytes(lora, m: int, n_processes: int) -> int:
-    """Per-round gossip collective payload a process RECEIVES under the
-    mix_gather lowering: every other process's client shard of the stacked
-    LoRA state (4-byte floats). 0 when the grid is a single process."""
+def _comm_bytes(session) -> dict:
+    """Per-round gossip payload a process RECEIVES, measured from the
+    live session's plans — the MixPlan of the actual LoRA tree and the
+    CommPlan of the actual exchange — i.e. the exact payloads of the
+    collectives the round issues, not an analytic estimate. Reports the
+    active mode's figure plus both alternatives for comparison; all 0 on
+    a single-process grid."""
     import jax
-    per_client = sum(x.size for x in jax.tree.leaves(lora)) // m
-    remote_clients = m - m // n_processes
-    return 4 * per_client * remote_clients if n_processes > 1 else 0
+    from repro.core import mixing
+    from repro.dist import comm
+    from repro.scenarios.schedule import schedule_support
+
+    plan = mixing.get_mix_plan(session.lora)
+    cp = session.comm_plan
+    if cp is None:      # dense run: compile the plan it WOULD use
+        cp = comm.build_comm_plan(
+            schedule_support(session.topo_schedule),
+            n_shards=jax.device_count())
+    dense_b = comm.dense_recv_bytes(cp.m, cp.n_shards, plan.cols)
+    sparse_b = cp.sparse_recv_bytes(plan.cols)
+    mode = session.config.mix_comm
+    return {
+        "mix_comm": mode,
+        "comm_bytes_per_round": dense_b if mode == "dense" else sparse_b,
+        "dense_comm_bytes_per_round": dense_b,
+        "sparse_comm_bytes_per_round": sparse_b,
+    }
 
 
 def worker_main(args) -> int:
@@ -94,6 +114,11 @@ def worker_main(args) -> int:
             print(f"restored {args.restore} at round {at}", flush=True)
 
     rounds = args.run_rounds or None
+    if args.warmup:
+        # compile + first rounds untimed: rounds_per_s then measures the
+        # steady-state round, not jit/partitioner/gloo startup
+        session.run(args.warmup)
+        jax.block_until_ready(session.lora)
     t0 = time.perf_counter()
     result = session.run(rounds)
     wall = time.perf_counter() - t0
@@ -117,8 +142,7 @@ def worker_main(args) -> int:
             "rounds_per_s": round(result.rounds / wall, 2),
             "final_loss": result.final_loss,
             "final_round": session.t,
-            "mix_allgather_bytes_per_round": _mix_allgather_bytes(
-                session.lora, m, n_proc),
+            **_comm_bytes(session),
         }
         if eval_res is not None:
             payload["eval_acc"] = eval_res["acc"]
@@ -223,11 +247,17 @@ def _parser() -> argparse.ArgumentParser:
     ap.add_argument("--p", type=float, default=0.5)
     ap.add_argument("--interval", type=int, default=2,
                     help="switching interval T (static)")
+    ap.add_argument("--mix-comm", default="dense",
+                    choices=("dense", "sparse", "sparse_overlap"),
+                    help="gossip comm lowering (DFLConfig.mix_comm)")
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--seed", type=int, default=0)
     # run control / artifacts
     ap.add_argument("--run-rounds", type=int, default=0,
                     help="rounds to run now (0 = config.rounds)")
+    ap.add_argument("--warmup", type=int, default=0,
+                    help="untimed leading rounds (compile excluded from "
+                         "rounds_per_s; they still advance the session)")
     ap.add_argument("--restore", default="")
     ap.add_argument("--ckpt", default="")
     ap.add_argument("--eval", action="store_true",

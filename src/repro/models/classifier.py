@@ -75,11 +75,24 @@ def classifier_forward(params: dict, cfg: ModelConfig, tokens: jax.Array,
 
 
 def classifier_loss(params: dict, cfg: ModelConfig, tokens: jax.Array,
-                    labels: jax.Array, lora: Optional[dict] = None):
+                    labels: jax.Array, lora: Optional[dict] = None,
+                    per_client: bool = False):
+    """Mean CE. With ``per_client`` also returns the per-leading-index
+    (per-client) mean-loss vector: its entries are shard-local reductions,
+    so they are bitwise identical on every process grid — the round loop
+    reports loss from this vector (host-reduced, one fixed order) while
+    the scalar (whose reduction XLA may decompose differently per grid)
+    feeds only the gradient, where summation order cannot matter."""
     logits = classifier_forward(params, cfg, tokens, lora).astype(jnp.float32)
     lse = jax.nn.logsumexp(logits, axis=-1)
     tgt = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
-    return jnp.mean(lse - tgt)
+    per = lse - tgt
+    loss = jnp.mean(per)
+    if not per_client:
+        return loss
+    vec = per.reshape(per.shape[0], -1).mean(axis=-1) if per.ndim > 1 \
+        else per
+    return loss, vec
 
 
 def classifier_accuracy(params: dict, cfg: ModelConfig, tokens: jax.Array,

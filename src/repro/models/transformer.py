@@ -250,42 +250,62 @@ def _chunk_ce(x_chunk, tgt_chunk, head, cfg: ModelConfig):
     onehot = jax.nn.one_hot(tgt_chunk, cfg.vocab_padded,
                             dtype=logits.dtype)
     tgt = jnp.einsum("...v,...v->...", logits, onehot)
-    return jnp.sum(lse - tgt)
+    per = lse - tgt
+    if per.ndim <= 1:
+        return jnp.sum(per)
+    # per-leading-index partial sums (clients in the DFL round) — the
+    # cross-index combine happens once, replicated, in `lm_loss`, so the
+    # loss scalar has one arithmetic order on every process grid
+    return jnp.sum(per, axis=tuple(range(1, per.ndim)))
 
 
 def lm_loss(params: dict, cfg: ModelConfig, tokens: jax.Array,
             targets: jax.Array, *, frontend=None, lora=None,
-            remat: bool = True):
+            remat: bool = True, per_client: bool = False):
     """Next-token CE over the *logical* vocab (padded ids masked out).
 
     The unembed + softmax-CE is computed in sequence chunks under lax.scan
     (rematerialized), so full-sequence logits over huge vocabs (gemma3:
     262k) are never resident — the fix for the 210 GB/device dry-run bomb
-    (EXPERIMENTS.md §Perf notes)."""
+    (EXPERIMENTS.md §Perf notes).
+
+    CE accumulates per-leading-index (per-client) partial sums; the
+    scalar is their flat combine. With ``per_client`` the return is
+    ((loss, aux-tuple), per_client_mean_vec): the vector entries are
+    shard-local, hence bitwise identical on every process grid — the DFL
+    round reports loss from it host-side while the scalar feeds only the
+    gradient (the MoE aux term keeps its plain mean; MoE archs are
+    outside the multihost parity surface)."""
     x, aux = hidden_forward(params, cfg, tokens, frontend=frontend,
                             lora=lora, remat=remat)
     head = params.get("unembed", params["embed"])
     S = x.shape[-2]
     C = min(_CE_CHUNK, S)
     n_tok = targets.size
+    lead = x.shape[:-2]
 
     if S % C != 0 or S <= C:
-        ce = _chunk_ce(x, targets, head, cfg) / n_tok
-        return ce + aux, (ce, aux)
+        total = _chunk_ce(x, targets, head, cfg)
+    else:
+        nc = S // C
+        xc = jnp.moveaxis(x.reshape(*lead, nc, C, x.shape[-1]), -3, 0)
+        tc = jnp.moveaxis(targets.reshape(*lead, nc, C), -2, 0)
 
-    nc = S // C
-    lead = x.shape[:-2]
-    xc = jnp.moveaxis(x.reshape(*lead, nc, C, x.shape[-1]), -3, 0)
-    tc = jnp.moveaxis(targets.reshape(*lead, nc, C), -2, 0)
+        @jax.checkpoint
+        def body(acc, inp):
+            xi, ti = inp
+            return acc + _chunk_ce(xi, ti, head, cfg), None
 
-    @jax.checkpoint
-    def body(acc, inp):
-        xi, ti = inp
-        return acc + _chunk_ce(xi, ti, head, cfg), None
+        total, _ = jax.lax.scan(
+            body, jnp.zeros(lead[:1], jnp.float32), (xc, tc))
 
-    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (xc, tc))
-    ce = total / n_tok
-    return ce + aux, (ce, aux)
+    ce = jnp.sum(total) / n_tok
+    out = ce + aux, (ce, aux)
+    if not per_client:
+        return out
+    vec = total / (n_tok // total.shape[0]) if total.ndim \
+        else total[None] / n_tok
+    return out, vec
 
 
 # ===========================================================================

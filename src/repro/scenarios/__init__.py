@@ -13,11 +13,13 @@ from repro.scenarios.library import (SCENARIO_MATRIX, SCENARIO_NAMES,
 from repro.scenarios.schedule import (BroadcastSchedule, ClientChurn,
                                       EdgeActivation, GossipSchedule,
                                       PhaseSwitch, StaticGraph,
-                                      StragglerDropout, TopologySchedule)
+                                      StragglerDropout, TopologySchedule,
+                                      schedule_support)
 
 __all__ = [
     "TopologySchedule", "GossipSchedule", "StaticGraph", "EdgeActivation",
     "ClientChurn", "StragglerDropout", "PhaseSwitch", "BroadcastSchedule",
     "Scenario", "SCENARIO_MATRIX", "SCENARIO_NAMES", "SCENARIOS",
     "schedule_from_config", "estimate_rho_sq", "get_scenario",
+    "schedule_support",
 ]

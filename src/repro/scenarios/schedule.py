@@ -28,6 +28,23 @@ Implementations:
 All Metropolis-based schedules emit symmetric W_t (`symmetric=True`);
 `GossipSchedule` emits products of pairwise averagers (`symmetric=False`),
 still doubly stochastic by construction.
+
+Two optional traits the cluster/sparse-comm layer reads (absent on
+user-supplied schedules -> conservative defaults):
+
+  * ``deterministic`` — True when a freshly constructed schedule replays
+    the identical W_t stream on every process (all config-derived
+    library schedules: their randomness is a seeded ``default_rng``).
+    `ClusterSession` skips the per-round `BroadcastSchedule` round-trip
+    for deterministic schedules — the draw agrees by construction.
+  * ``support_adjacency()`` — the (m, m) bool union support of every
+    W_t the schedule can emit (incl. diagonal). `repro.dist.comm`
+    compiles it into the sparse exchange's `CommPlan`. Metropolis-based
+    schedules support exactly adj + I; `GossipSchedule`'s within-round
+    *products* of pairwise averagers can chain along paths, so its
+    support is the transitive closure of the graph — sparse comm wins
+    nothing on a connected gossip scenario (use the Metropolis
+    scenarios for sparse grids).
 """
 from __future__ import annotations
 
@@ -49,6 +66,39 @@ class TopologySchedule(Protocol):
         ...
 
 
+def _with_diag(adj: np.ndarray) -> np.ndarray:
+    sup = (np.asarray(adj) != 0).copy()
+    np.fill_diagonal(sup, True)
+    return sup
+
+
+def _transitive_closure(adj: np.ndarray) -> np.ndarray:
+    """Boolean reachability closure (connected-component blocks)."""
+    sup = _with_diag(adj)
+    while True:
+        nxt = sup | (sup @ sup)
+        if (nxt == sup).all():
+            return sup
+        sup = nxt
+
+
+def schedule_support(schedule: TopologySchedule) -> np.ndarray:
+    """The (m, m) bool union support of a schedule's W_t stream.
+
+    Delegates to the schedule's ``support_adjacency()``; schedules
+    without one (user-supplied objects) cannot be compiled into a sparse
+    `CommPlan` — mix with ``mix_comm="dense"`` or implement the method.
+    """
+    fn = getattr(schedule, "support_adjacency", None)
+    if fn is None:
+        raise ValueError(
+            f"{type(schedule).__name__} exposes no support_adjacency(); "
+            f"sparse gossip comm (mix_comm='sparse'/'sparse_overlap') "
+            f"needs the union support of W_t — use mix_comm='dense' or "
+            f"implement support_adjacency() on the schedule")
+    return _with_diag(fn())
+
+
 class GossipSchedule:
     """The legacy default: Lemma A.10 sequential pairwise averaging via a
     core `Topology`. Wraps (and shares the RNG of) the Topology object, so
@@ -56,6 +106,7 @@ class GossipSchedule:
     code produced."""
 
     symmetric = False
+    deterministic = True    # seeded Topology RNG: same stream per seed
 
     def __init__(self, topology: Topology):
         self.topology = topology
@@ -64,11 +115,20 @@ class GossipSchedule:
     def next_w(self, t: int) -> np.ndarray:
         return self.topology.sample()
 
+    def support_adjacency(self) -> np.ndarray:
+        """Within one round the sampler multiplies pairwise averagers, so
+        state can propagate along activated paths — the union support is
+        the transitive closure of the graph, not adj + I. On a connected
+        graph that is the full component: gossip scenarios gain nothing
+        from sparse comm (the Metropolis scenarios do)."""
+        return _transitive_closure(self.topology.adj)
+
 
 class StaticGraph:
     """Constant W: the Metropolis weights of the underlying graph."""
 
     symmetric = True
+    deterministic = True
 
     def __init__(self, adj: np.ndarray, **_ignored):
         self.adj = np.asarray(adj, float)
@@ -78,12 +138,16 @@ class StaticGraph:
     def next_w(self, t: int) -> np.ndarray:
         return self._W
 
+    def support_adjacency(self) -> np.ndarray:
+        return _with_diag(self.adj)
+
 
 class EdgeActivation:
     """Each edge of the underlying graph fires independently w.p. p every
     round; W_t is the Metropolis matrix of the fired subgraph."""
 
     symmetric = True
+    deterministic = True    # seeded default_rng: same stream per seed
 
     def __init__(self, adj: np.ndarray, p: float = 0.5, seed: int = 0):
         self.adj = (np.asarray(adj, float) > 0).astype(float)
@@ -104,6 +168,12 @@ class EdgeActivation:
 
     def next_w(self, t: int) -> np.ndarray:
         return metropolis_weights(self._fired_adj())
+
+    def support_adjacency(self) -> np.ndarray:
+        """Fired subgraphs are subgraphs: Metropolis support ⊆ adj + I.
+        Holds for the churn/straggler subclasses too (they only *remove*
+        edges via the identity row/col repair)."""
+        return _with_diag(self.adj)
 
 
 class ClientChurn(EdgeActivation):
@@ -158,13 +228,18 @@ class StragglerDropout(EdgeActivation):
 
 class BroadcastSchedule:
     """Process-grid agreement wrapper: rank 0's W_t is the only draw that
-    counts. `ClusterSession` wraps every schedule in this so all processes
-    mix with the same matrix even when the inner schedule's host RNG or
-    Markov state could drift (user-supplied schedules, non-deterministic
-    sources). Config-derived schedules are already deterministic per seed,
-    so the broadcast is a safety net there — but the paper's setting has
-    exactly one realized W_t per round, and under a cluster that realization
-    must be owned by one process.
+    counts. `ClusterSession` wraps schedules that do not declare
+    ``deterministic`` (user-supplied objects, non-deterministic sources)
+    so all processes mix with the same matrix even when the inner
+    schedule's host RNG or Markov state could drift. Config-derived
+    library schedules replay the identical stream per seed on every
+    process (``deterministic=True``) and skip this wrapper — the
+    per-round host broadcast is a blocking collective that dominates the
+    round at small payloads (BENCH_multihost.json), and for a
+    deterministic source it transports bytes every process already has.
+    The paper's setting has exactly one realized W_t per round; under a
+    cluster that realization is owned by one process only when the draw
+    could disagree.
 
     Single-process this is an exact passthrough (same dtype, same RNG
     stream). Multi-process, the inner schedule only *advances* on rank 0;
@@ -176,10 +251,15 @@ class BroadcastSchedule:
     every process, so the broadcast replays in lockstep.
     """
 
+    deterministic = False   # the wrapper exists because the inner isn't
+
     def __init__(self, inner: TopologySchedule):
         self.inner = inner
         self.m = inner.m
         self.symmetric = inner.symmetric
+
+    def support_adjacency(self) -> np.ndarray:
+        return schedule_support(self.inner)
 
     def next_w(self, t: int) -> np.ndarray:
         from repro.dist import multihost
@@ -206,6 +286,14 @@ class PhaseSwitch:
         self.switch_round = switch_round
         self.m = first.m
         self.symmetric = first.symmetric and second.symmetric
+
+    @property
+    def deterministic(self) -> bool:
+        return bool(getattr(self.first, "deterministic", False)
+                    and getattr(self.second, "deterministic", False))
+
+    def support_adjacency(self) -> np.ndarray:
+        return schedule_support(self.first) | schedule_support(self.second)
 
     def next_w(self, t: int) -> np.ndarray:
         sched = self.first if t < self.switch_round else self.second

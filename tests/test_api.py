@@ -106,9 +106,15 @@ def test_session_matches_handwired_quickstart_loop():
     opt_state = opt.init(lora)
 
     def loss_fn(bp, lo, micro):
-        return tf.lm_loss(bp, cfg, micro["tokens"], micro["targets"],
-                          frontend=micro.get("frontend"), lora=lo)[0]
+        # per_client=True mirrors the api's loss_fn: the REPORTED loss is
+        # the host-side fixed-order reduction of the per-client vector
+        # (grid-invariant), while the in-graph scalar feeds the gradient
+        out, per = tf.lm_loss(bp, cfg, micro["tokens"], micro["targets"],
+                              frontend=micro.get("frontend"), lora=lo,
+                              per_client=True)
+        return out[0], per
 
+    from repro.api.session import _metric_loss
     round_fn = jax.jit(make_dfl_round(loss_fn, opt, local_steps=LS))
     stream = lm_token_stream(cfg.vocab_size, B * LS, S, n_clients=M, seed=0)
     legacy_losses = []
@@ -120,7 +126,7 @@ def test_session_matches_handwired_quickstart_loop():
         masks = round_masks("tad", t, 3).as_array()
         lora, opt_state, metrics = round_fn(base, lora, opt_state, batch,
                                             W, masks)
-        legacy_losses.append(float(metrics["loss"]))
+        legacy_losses.append(_metric_loss(metrics))
 
     # --- the same experiment through the declarative API ---
     rec = HistoryRecorder()

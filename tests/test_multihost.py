@@ -171,7 +171,17 @@ def test_two_process_parity_bitwise(tmp_path):
     payload = json.load(open(out_json))
     assert payload["n_processes"] == 2
     assert payload["final_loss"] == rec.history[-1]["loss"]
-    assert payload["mix_allgather_bytes_per_round"] > 0
+    # dense run: the measured collective payload is the dense all-gather,
+    # with the sparse alternative reported alongside for comparison
+    assert payload["mix_comm"] == "dense"
+    assert payload["comm_bytes_per_round"] > 0
+    assert payload["comm_bytes_per_round"] == \
+        payload["dense_comm_bytes_per_round"]
+    # complete graph at 4 clients / 2 shards: every row is a border row,
+    # so the sparse halo carries exactly the dense byte count (strict
+    # reduction on sparser graphs is pinned in tests/test_comm.py)
+    assert 0 < payload["sparse_comm_bytes_per_round"] <= \
+        payload["dense_comm_bytes_per_round"]
     # evaluate() works on the grid (global eval batch + sharded lora
     # slices) and scores identically to the single-process run
     assert payload["eval_acc"] == single.evaluate(n=64)["acc"]
@@ -247,3 +257,95 @@ def test_restore_into_two_process_grid(tmp_path):
     full = Session(config)
     full.run()
     _assert_trees_equal(load_pytree(done)["lora"], full.lora)
+
+
+# ---------------------------------------------------------------------------
+# -m multihost: topology-sparse gossip (mix_comm) on real grids
+# ---------------------------------------------------------------------------
+
+SPARSE_FAMILIES = ("ring", "torus", "exponential", "small_world",
+                   "erdos_renyi", "complete")
+
+
+def _sparse_cfg(**kw):
+    base = dict(model="encoder", task="sst2", model_kw=ENC_KW, n_clients=8,
+                rounds=3, local_steps=2, batch_size=8, scenario="static",
+                topology="ring", p=0.5, T=2, lr=1e-3, seed=0,
+                mix_comm="sparse")
+    base.update(kw)
+    return DFLConfig(**base)
+
+
+def _spawn_ckpt(n, config, tmp_path, tag, extra=()):
+    cfg_path = os.path.join(tmp_path, f"{tag}.json")
+    ckpt = os.path.join(tmp_path, f"{tag}.npz")
+    with open(cfg_path, "w") as f:
+        json.dump(config.to_dict(), f)
+    _spawn_ok(n, ["--config", cfg_path, "--ckpt", ckpt, "--quiet", *extra])
+    return load_pytree(ckpt)
+
+
+@pytest.mark.multihost
+@pytest.mark.parametrize("topology", SPARSE_FAMILIES)
+def test_sparse_parity_bitwise_across_grids(topology, tmp_path):
+    """mix_comm='sparse' on a static graph is the dense algorithm with a
+    smaller exchange: a 2-process grid must reproduce the single-process
+    run bit-for-bit for EVERY library graph family (each exercises a
+    different CommPlan shape — border rows only, asymmetric exports,
+    all-rows-remote on complete)."""
+    config = _sparse_cfg(topology=topology)
+    tree = _spawn_ckpt(2, config, tmp_path, f"sparse2_{topology}")
+    single = Session(config)
+    single.run()
+    _assert_trees_equal(tree["lora"], single.lora)
+    if topology == "ring":
+        # and the sparse lowering IS dense end-to-end (same grid count)
+        dense = Session(_sparse_cfg(topology=topology, mix_comm="dense"))
+        dense.run()
+        _assert_trees_equal(tree["lora"], dense.lora)
+
+
+@pytest.mark.multihost
+def test_sparse_four_process_parity_and_comm_bytes(tmp_path):
+    """4 shards of a ring: parity still bitwise, and the reported
+    collective payload is the SPARSE halo figure. At 8 clients / 4
+    shards every ring row is a border row, so the halo carries exactly
+    the dense byte count (the win at this ratio is fewer/smaller
+    collectives, not bytes — strict byte reduction is asserted at 2
+    shards, where interior rows exist)."""
+    config = _sparse_cfg()
+    out_json = os.path.join(tmp_path, "sparse4.json")
+    tree = _spawn_ckpt(4, config, tmp_path, "sparse4",
+                       extra=["--json", out_json])
+    single = Session(config)
+    single.run()
+    _assert_trees_equal(tree["lora"], single.lora)
+    payload = json.load(open(out_json))
+    assert payload["mix_comm"] == "sparse"
+    assert payload["comm_bytes_per_round"] == \
+        payload["sparse_comm_bytes_per_round"] > 0
+    assert payload["sparse_comm_bytes_per_round"] == \
+        payload["dense_comm_bytes_per_round"]
+
+
+@pytest.mark.multihost
+def test_sparse_overlap_parity_across_grids(tmp_path):
+    """Overlapped (one-round-delayed) gossip is a DIFFERENT algorithm
+    from dense, but its semantics must not depend on the process count:
+    1-, 2- and 4-process grids land on identical states."""
+    config = _sparse_cfg(mix_comm="sparse_overlap", rounds=4)
+    tree2 = _spawn_ckpt(2, config, tmp_path, "overlap2")
+    tree4 = _spawn_ckpt(4, config, tmp_path, "overlap4")
+    single = Session(config)
+    single.run()
+    _assert_trees_equal(tree2["lora"], single.lora)
+    _assert_trees_equal(tree4["lora"], single.lora)
+    _assert_trees_equal(tree2["opt"]["mu"], single.opt_state.mu)
+    # and it genuinely differs from the dense algorithm on a ring
+    dense = Session(_sparse_cfg(mix_comm="dense", rounds=4))
+    dense.run()
+    import jax as _jax
+    assert any(
+        not np.array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(_jax.tree.leaves(dense.lora),
+                        _jax.tree.leaves(single.lora)))
