@@ -15,6 +15,8 @@ Tracked metrics per artifact (direction-aware):
   BENCH_round_loop.json  session_us_per_round               (lower better)
   BENCH_scenarios.json   us_per_round per scenario          (lower better)
   BENCH_serving.json     tok_s per (n_slots, mode, n_adapters) (higher)
+                         + Poisson-traffic tok_s / max_streams (higher)
+                         and latency p50/p99 ms                (lower)
   BENCH_multihost.json   rounds_per_s per (mix_comm, grid size) and the
                          within-mode scale_vs_1p at N>1       (higher)
 
@@ -69,6 +71,15 @@ def _serving(doc) -> Metrics:
         key = (f"serving_s{row['n_slots']}_{row['mode']}"
                f"{row['n_adapters']}_tok_s")
         out[key] = (float(row["tok_s"]), "higher")
+    tr = doc.get("traffic")
+    if tr:
+        out["serving_traffic_tok_s"] = (float(tr["tok_s"]), "higher")
+        out["serving_traffic_p50_ms"] = (float(tr["latency_p50_ms"]),
+                                         "lower")
+        out["serving_traffic_p99_ms"] = (float(tr["latency_p99_ms"]),
+                                         "lower")
+        out["serving_traffic_max_streams"] = (float(tr["max_streams"]),
+                                              "higher")
     return out
 
 

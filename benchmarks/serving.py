@@ -8,6 +8,13 @@ per adapter), and asserts the one-compile invariant: a fixed-capacity
 decode_step, so the multi-adapter column's overhead is pure per-slot
 gather + rank-r matmul work, never recompilation.
 
+A second section drives the paged serving core under synthetic Poisson
+traffic (seeded exponential inter-arrivals, mixed prompt lengths and
+adapters, a page pool deliberately smaller than n_slots x max_len so
+eviction is live): tok/s, p50/p99 request latency, TTFT, and the maximum
+number of simultaneously decoding streams sustained — the scheduler /
+page-pool counterpart of the steady-state rows above.
+
   PYTHONPATH=src python -m benchmarks.run --only serving
 """
 from __future__ import annotations
@@ -51,6 +58,68 @@ def _drain(engine, prompts, adapters, gen: int) -> float:
     engine.run()
     dt = time.perf_counter() - t0
     return len(prompts) * gen / dt
+
+
+def traffic(params, cfg, stacked, *, n_slots: int = 4, n_requests: int = 24,
+            rate: float = 0.5, seed: int = 0, quick: bool = True) -> dict:
+    """Poisson open-loop traffic through the paged + chunked-prefill +
+    DRR-scheduled path. ``rate`` is the mean arrival rate in requests per
+    engine tick; the page pool holds ~60% of full per-slot coverage so
+    bursts trigger preemption-by-eviction rather than OOM."""
+    gen = 12 if quick else 32
+    page_size = 8
+    max_len = 64 if quick else 128
+    pages_full = n_slots * (max_len // page_size)
+    n_pages = 1 + max(max_len // page_size,
+                      int(0.4 * pages_full))        # contention by design
+    pool = AdapterPool.from_stacked(stacked, consensus=False)
+    serving = ServingSession(model_cfg=cfg, params=params, adapters=pool,
+                             n_slots=n_slots, max_len=max_len, paged=True,
+                             page_size=page_size, n_pages=n_pages,
+                             prefill_chunk=page_size)
+    eng = serving.engine
+    names = [f"client_{i}" for i in range(_N_POOL)]
+
+    rng = np.random.default_rng(seed)
+    arrive = np.cumsum(rng.exponential(1.0 / rate, size=n_requests))
+    prompt_lens = rng.integers(2, 20, size=n_requests)
+    prompts = [rng.integers(0, cfg.vocab_size, size=int(n)).astype(np.int32)
+               for n in prompt_lens]
+
+    # warmup: compile decode + chunk steps outside the timed window
+    serving.generate(prompts[0], adapter=names[0], max_new=2)
+
+    nxt = 0
+    max_streams = 0
+    t0 = time.perf_counter()
+    while nxt < n_requests or eng.scheduler.n_queued or \
+            any(s.req is not None for s in eng.slots):
+        while nxt < n_requests and arrive[nxt] <= eng.ticks:
+            serving.submit(prompts[nxt], adapter=names[nxt % len(names)],
+                           max_new=gen)
+            nxt += 1
+        max_streams = max(max_streams, eng.tick())
+    dt = time.perf_counter() - t0
+
+    m = serving.metrics()
+    done = [r for r in eng.requests.values() if r.done]
+    tok_total = sum(len(r.tokens_out) for r in done)
+    out = {
+        "n_requests": n_requests, "rate_per_tick": rate,
+        "n_slots": n_slots, "page_size": page_size, "n_pages": n_pages,
+        "gen_tokens": gen,
+        "tok_s": round(tok_total / dt, 2),
+        "latency_p50_ms": round(m["latency_s"]["p50"] * 1e3, 2),
+        "latency_p99_ms": round(m["latency_s"]["p99"] * 1e3, 2),
+        "ttft_p50_ms": round(m["ttft_s"]["p50"] * 1e3, 2),
+        "max_streams": max_streams,
+        "preemptions": m["preemptions"],
+        "device_steps": m["device_steps"],
+        "compile_count": serving.compile_count,
+        "prefill_compile_count": eng.prefill.compile_count,
+    }
+    assert m["completed"] == n_requests + 1          # +1 warmup
+    return out
 
 
 def run(quick: bool = True, json_path: str = "BENCH_serving.json") -> dict:
@@ -103,8 +172,16 @@ def run(quick: bool = True, json_path: str = "BENCH_serving.json") -> dict:
     print(f"one compiled decode_step across n_adapters in {{1,4,8}}: "
           f"{one_compile}")
 
+    tr = traffic(params, cfg, stacked, quick=quick)
+    print(f"traffic: {tr['n_requests']} reqs @ {tr['rate_per_tick']}/tick "
+          f"-> {tr['tok_s']:.1f} tok/s, p50 {tr['latency_p50_ms']:.0f} ms, "
+          f"p99 {tr['latency_p99_ms']:.0f} ms, max {tr['max_streams']} "
+          f"streams, {tr['preemptions']} preemptions")
+    assert tr["compile_count"] == 1, "traffic path retraced decode_step"
+
     result = {"arch": _ARCH, "backend": jax.default_backend(),
-              "gen_tokens": gen, "rows": rows, "one_compile": one_compile}
+              "gen_tokens": gen, "rows": rows, "one_compile": one_compile,
+              "traffic": tr}
     if json_path:
         with open(json_path, "w") as f:
             json.dump(result, f, indent=1)

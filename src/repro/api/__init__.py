@@ -18,6 +18,7 @@ from repro.api.config import DFLConfig
 from repro.api.rounds import build_round
 from repro.api.schedule import AdaptiveSchedule, MaskSchedule, StaticSchedule
 from repro.api.serving import AdapterPool, ServeSync, ServingSession
+from repro.serving import QuotaExceeded, TenantQuota
 from repro.api.session import RoundEvent, RunResult, Session
 from repro.scenarios import TopologySchedule, schedule_from_config
 
@@ -27,5 +28,6 @@ __all__ = [
     "TopologySchedule", "schedule_from_config",
     "Callback", "ConsoleLogger", "HistoryRecorder", "CheckpointCallback",
     "AdapterPool", "ServingSession", "ServeSync",
+    "TenantQuota", "QuotaExceeded",
     "build_round",
 ]

@@ -264,13 +264,22 @@ class ServingSession:
     `Session` checkpoint); ``capacity=`` alone reserves an all-base pool
     to `add_adapter` into later. With none of the three, the session is
     pool-less and serves the base model with zero adapter overhead.
+
+    The serving-core knobs pass straight through to the engine:
+    ``paged``/``page_size``/``n_pages`` (block KV-cache pool),
+    ``prefill_chunk`` (chunked prefill for long prompts), and ``quotas``
+    (per-adapter `launch.serving.TenantQuota` limits). `metrics()` returns
+    the request-lifecycle aggregates.
     """
 
     def __init__(self, model: str = "gemma3-1b", *, reduced: bool = True,
                  model_cfg=None, params=None, checkpoint: str = "",
                  adapters: Optional[AdapterPool] = None, capacity: int = 0,
                  consensus: bool = True, n_slots: int = 4,
-                 max_len: int = 256, init_seed: int = 0):
+                 max_len: int = 256, init_seed: int = 0,
+                 paged: bool = False, page_size: int = 16,
+                 n_pages: Optional[int] = None, prefill_chunk: int = 0,
+                 quotas: Optional[dict] = None):
         self.model_cfg = model_cfg if model_cfg is not None \
             else (get_config(model).reduced() if reduced
                   else get_config(model))
@@ -292,7 +301,9 @@ class ServingSession:
             self.pool = None
         self.engine = ServeEngine(self.params, self.model_cfg,
                                   n_slots=n_slots, max_len=max_len,
-                                  adapters=self.pool)
+                                  adapters=self.pool, paged=paged,
+                                  page_size=page_size, n_pages=n_pages,
+                                  prefill_chunk=prefill_chunk, quotas=quotas)
 
     @classmethod
     def from_session(cls, session, *, consensus: bool = True,
@@ -345,6 +356,11 @@ class ServingSession:
     def compile_count(self) -> int:
         """decode_step traces so far — 1 after the first tick, forever."""
         return self.engine.compile_count
+
+    def metrics(self) -> dict:
+        """Request-lifecycle aggregates (queue wait, TTFT, latency,
+        preemptions) plus engine counters — see `ServeEngine.metrics`."""
+        return self.engine.metrics()
 
     def _require_pool(self) -> AdapterPool:
         if self.pool is None:

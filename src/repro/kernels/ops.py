@@ -17,6 +17,7 @@ from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.gossip_mix import gossip_mix as _gossip
 from repro.kernels.lora_matmul import lora_matmul as _lora_mm
 from repro.kernels.lora_matmul import slot_lora_matmul as _slot_lora_mm
+from repro.kernels.paged_attention import paged_attn_decode as _paged_attn
 from repro.kernels.rglru_scan import rglru_scan as _rglru
 
 _FORCE: Optional[str] = None   # None | "ref" | "pallas_interpret"
@@ -51,6 +52,23 @@ def slot_lora_matmul(x, w, a, b, slots, scale: float = 1.0):
         return ref.slot_lora_matmul_ref(x, w, a, b, slots, scale)
     return _slot_lora_mm(x, w, a, b, slots, scale,
                          interpret=(m == "interpret"))
+
+
+def paged_attn_decode(q, k_pages, v_pages, table, lengths):
+    """Single-token decode attention over a paged KV cache (the serving
+    core's gather). q: (B, 1, H, hd); k_pages/v_pages: (n_pages,
+    page_size, KV, hd); table: (B, P) int32; lengths: (B,). The ref
+    oracle is bitwise-identical to the contiguous decode path; the
+    Pallas kernel is the flash-decode accumulation (tolerance)."""
+    m = _mode()
+    if m == "ref":
+        return ref.paged_attn_decode_ref(q, k_pages, v_pages, table, lengths)
+    B, _, H, hd = q.shape
+    n_kv = k_pages.shape[2]
+    qg = q.reshape(B, n_kv, H // n_kv, hd)
+    out = _paged_attn(qg, k_pages, v_pages, table, lengths,
+                      interpret=(m == "interpret"))
+    return out.reshape(B, 1, H, hd)
 
 
 def flash_attention(q, k, v, *, causal: bool = True,

@@ -6,6 +6,7 @@ compiled on TPU) and these references.
 """
 from __future__ import annotations
 
+import math
 from typing import Optional
 
 import jax
@@ -57,6 +58,38 @@ def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
     probs = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bhsl,bhld->bhsd", probs, v.astype(jnp.float32))
     return out.astype(q.dtype)
+
+
+def paged_attn_decode_ref(q: jax.Array, k_pages: jax.Array,
+                          v_pages: jax.Array, table: jax.Array,
+                          lengths: jax.Array) -> jax.Array:
+    """Single-token decode attention over a paged KV cache.
+
+    q: (B, 1, H, hd); k_pages/v_pages: (n_pages, page_size, KV, hd);
+    table: (B, P) int32 logical->physical page map; lengths: (B,) valid
+    context per row. Returns (B, 1, H, hd).
+
+    Gathers each row's pages into the contiguous (B, L = P*page_size, KV,
+    hd) view and then mirrors `models.attention._attend` LINE FOR LINE
+    (same einsum strings, f32 casts, -1e30 masking, sqrt scale), so at
+    identical cached values the paged path reproduces the contiguous
+    decode path bit-for-bit — the serving-core correctness contract
+    asserted by tests/test_paging.py."""
+    B, Sq, H, hd = q.shape
+    ps, n_kv = k_pages.shape[1], k_pages.shape[2]
+    P = table.shape[1]
+    L = P * ps
+    k = k_pages[table].reshape(B, L, n_kv, hd)
+    v = v_pages[table].reshape(B, L, n_kv, hd)
+    mask = (jnp.arange(L)[None, :] < lengths[:, None])[:, None, None, None, :]
+    G = H // n_kv
+    qg = q.reshape(B, Sq, n_kv, G, hd)
+    scores = jnp.einsum("bskgh,blkh->bkgsl", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) / math.sqrt(hd)
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgsl,blkh->bskgh", probs, v.astype(jnp.float32))
+    return out.reshape(B, Sq, H, hd).astype(q.dtype)
 
 
 def gossip_mix_ref(w_eff: jax.Array, x: jax.Array) -> jax.Array:

@@ -240,11 +240,41 @@ def cache_spec(cfg: ModelConfig, batch: int, max_len: int,
     }
 
 
+def init_paged_cache(cfg: ModelConfig, batch: int, n_pages: int,
+                     page_size: int, dtype=jnp.float32) -> dict:
+    """Paged KV cache (serving core): physical pages shared by all slots,
+    per-slot position counters. The logical->physical block table lives at
+    the cache top level (`transformer.init_cache(paging=...)`) because one
+    table serves every paged layer. Physical page 0 is the null page —
+    free slots' table rows point at it and no active slot ever reads it."""
+    kv, hd = cfg.n_kv_heads, cfg.hd
+    return {
+        "kp": zeros(n_pages, page_size, kv, hd, dtype=dtype),
+        "vp": zeros(n_pages, page_size, kv, hd, dtype=dtype),
+        "t": jnp.zeros((batch,), dtype=jnp.int32),
+    }
+
+
+def paged_cache_spec(cfg: ModelConfig, batch: int, n_pages: int,
+                     page_size: int, dtype=jnp.float32) -> dict:
+    """ShapeDtypeStruct version of init_paged_cache (dry-run)."""
+    kv, hd = cfg.n_kv_heads, cfg.hd
+    f = jax.ShapeDtypeStruct
+    return {
+        "kp": f((n_pages, page_size, kv, hd), dtype),
+        "vp": f((n_pages, page_size, kv, hd), dtype),
+        "t": f((batch,), jnp.int32),
+    }
+
+
 def attn_decode(params: dict, cfg: ModelConfig, x: jax.Array, cache: dict, *,
                 window: Optional[int] = None, lora: Optional[dict] = None,
-                cross_kv: Optional[tuple] = None):
+                cross_kv: Optional[tuple] = None,
+                pages: Optional[dict] = None):
     """x: (B, 1, d). Returns (out, new_cache). With ``cross_kv`` (k, v) the
-    layer is cross-attention (static memory KV, cache untouched)."""
+    layer is cross-attention (static memory KV, cache untouched). A cache
+    carrying "kp"/"vp" is paged (serving core) and additionally needs
+    ``pages`` = {"table": (B, P) int32}."""
     scale = cfg.lora_alpha / cfg.lora_rank
     hd = cfg.hd
     B = x.shape[0]
@@ -268,6 +298,10 @@ def attn_decode(params: dict, cfg: ModelConfig, x: jax.Array, cache: dict, *,
     q = apply_rope(q, pos, cfg.rope_theta)
     k_new = apply_rope(k_new, pos, cfg.rope_theta)
 
+    if "kp" in cache:
+        return _paged_decode_core(cfg, q, k_new, v_new, cache, pages,
+                                  params, lora, scale)
+
     L = cache["k"].shape[1]
     slot = (t % L).astype(jnp.int32)                   # (B,)
     rows = jnp.arange(B)
@@ -285,3 +319,145 @@ def attn_decode(params: dict, cfg: ModelConfig, x: jax.Array, cache: dict, *,
     out = lora_linear(out, params["wo"], (lora or {}).get("wo"), scale)
     new_cache = {"k": k_cache, "v": v_cache, "t": t + 1}
     return shard_act(out), new_cache
+
+
+def _paged_decode_core(cfg: ModelConfig, q, k_new, v_new, cache: dict,
+                       pages: dict, params: dict, lora, scale: float):
+    """Paged tail of attn_decode: scatter this token's K/V into the slot's
+    current page, then attend over the block-table view. Inactive rows
+    (all-zero table row) scatter onto the null page 0, which no active
+    row's table references — their output is garbage the engine discards.
+    At identical contexts the ref path is bitwise equal to the contiguous
+    branch above: the gathered (B, L, KV, hd) view holds the same values,
+    masks, and einsum shapes (tests/test_paging.py asserts this)."""
+    from repro.kernels import ops   # deferred: kernels import jax.pallas
+
+    B = q.shape[0]
+    t = cache["t"]
+    table = pages["table"]                             # (B, P)
+    ps = cache["kp"].shape[1]
+    P = table.shape[1]
+    L = P * ps
+    rows = jnp.arange(B)
+    phys = table[rows, jnp.clip(t // ps, 0, P - 1)]    # (B,)
+    off = t % ps
+    kp = cache["kp"].at[phys, off].set(k_new[:, 0].astype(cache["kp"].dtype))
+    vp = cache["vp"].at[phys, off].set(v_new[:, 0].astype(cache["vp"].dtype))
+    lengths = jnp.minimum(t + 1, L)
+    out = ops.paged_attn_decode(q, kp, vp, table, lengths)
+    out = out.reshape(B, 1, cfg.n_heads * cfg.hd)
+    out = lora_linear(out, params["wo"], (lora or {}).get("wo"), scale)
+    new_cache = {"kp": kp, "vp": vp, "t": t + 1}
+    return shard_act(out), new_cache
+
+
+# ---------------------------------------------------------------------------
+# Chunked prefill (serving core: one slot's prompt, C tokens per step)
+# ---------------------------------------------------------------------------
+
+def _chunk_qkv(params: dict, cfg: ModelConfig, x, pos, lora, scale):
+    """Shared head of both chunk paths: projections + RoPE at absolute
+    positions. x: (1, C, d); pos: (C,) int32."""
+    hd = cfg.hd
+    C = x.shape[1]
+    lo = lora or {}
+    q = lora_linear(x, params["wq"], lo.get("wq"), scale,
+                    params.get("bq")).reshape(1, C, cfg.n_heads, hd)
+    k_new = lora_linear(x, params["wk"], lo.get("wk"), scale,
+                        params.get("bk")).reshape(1, C, cfg.n_kv_heads, hd)
+    v_new = lora_linear(x, params["wv"], lo.get("wv"), scale,
+                        params.get("bv")).reshape(1, C, cfg.n_kv_heads, hd)
+    q = apply_rope(q, pos, cfg.rope_theta)
+    k_new = apply_rope(k_new, pos, cfg.rope_theta)
+    return q, k_new, v_new
+
+
+def _chunk_out(params: dict, cfg: ModelConfig, out, lora, scale):
+    out = out.reshape(1, -1, cfg.n_heads * cfg.hd)
+    out = lora_linear(out, params["wo"], (lora or {}).get("wo"), scale)
+    return shard_act(out)
+
+
+def attn_chunk_paged(params: dict, cfg: ModelConfig, x, cache: dict,
+                     table_row, slot, start, limit, *,
+                     lora: Optional[dict] = None):
+    """One prefill chunk into a PAGED layer cache. x: (1, C, d) chunk of
+    one slot's prompt; table_row: (P,) the slot's block-table row; slot /
+    start / limit: () int32 — batch row, absolute chunk offset, and total
+    real (unpadded) prefill length. Pad positions (>= limit) write nothing
+    (masked to the old value) and their outputs are garbage the caller
+    drops. Returns (out (1, C, d_q), new layer cache)."""
+    scale = cfg.lora_alpha / cfg.lora_rank
+    C = x.shape[1]
+    pos = start + jnp.arange(C)                        # (C,) absolute
+    q, k_new, v_new = _chunk_qkv(params, cfg, x, pos, lora, scale)
+
+    ps = cache["kp"].shape[1]
+    P = table_row.shape[0]
+    L = P * ps
+    pos_c = jnp.clip(pos, 0, L - 1)                    # pads stay in range
+    phys = table_row[pos_c // ps]                      # (C,)
+    off = pos_c % ps
+    valid_w = (pos < limit)[:, None, None]
+    kw = jnp.where(valid_w, k_new[0].astype(cache["kp"].dtype),
+                   cache["kp"][phys, off])
+    vw = jnp.where(valid_w, v_new[0].astype(cache["vp"].dtype),
+                   cache["vp"][phys, off])
+    kp = cache["kp"].at[phys, off].set(kw)
+    vp = cache["vp"].at[phys, off].set(vw)
+
+    k_all = kp[table_row].reshape(1, L, cfg.n_kv_heads, cfg.hd)
+    v_all = vp[table_row].reshape(1, L, cfg.n_kv_heads, cfg.hd)
+    k_pos = jnp.arange(L)
+    mask = (k_pos[None, :] <= pos[:, None]) & (k_pos[None, :] < limit)
+    out = _attend(q, k_all, v_all, mask[None, None, None], cfg.n_kv_heads)
+
+    t_new = cache["t"].at[slot].set(jnp.minimum(start + C, limit))
+    return (_chunk_out(params, cfg, out, lora, scale),
+            {"kp": kp, "vp": vp, "t": t_new})
+
+
+def attn_chunk_rolling(params: dict, cfg: ModelConfig, x, cache: dict,
+                       slot, start, limit, *, lora: Optional[dict] = None):
+    """One prefill chunk into a ROLLING (contiguous) layer cache of length
+    L = the layer's window (or max_len for global layers). The slot's
+    buffer holds positions start-L..start-1 at entry (slot p%L); the chunk
+    attends its banded context, then writes back its last min(C, L) real
+    positions. Matches decode semantics: key position k is visible to
+    query position s iff 0 <= k <= s and s - k < L."""
+    scale = cfg.lora_alpha / cfg.lora_rank
+    C = x.shape[1]
+    L = cache["k"].shape[1]
+    pos = start + jnp.arange(C)
+    q, k_new, v_new = _chunk_qkv(params, cfg, x, pos, lora, scale)
+
+    s_idx = jnp.arange(L)
+    ctx_pos = start - L + ((s_idx - start) % L)        # position held at
+    #                                                    buffer slot s_idx
+    k_all = jnp.concatenate([cache["k"][slot][None], k_new], axis=1)
+    v_all = jnp.concatenate([cache["v"][slot][None], v_new], axis=1)
+    k_pos = jnp.concatenate([ctx_pos, pos])            # (L + C,)
+    mask = ((k_pos[None, :] <= pos[:, None]) &
+            (k_pos[None, :] >= 0) &
+            (k_pos[None, :] < limit) &
+            (pos[:, None] - k_pos[None, :] < L))
+    out = _attend(q, k_all, v_all, mask[None, None, None], cfg.n_kv_heads)
+
+    # write-back, one gather per buffer slot j: the LATEST real chunk
+    # position p with p % L == j (pads and wrapped-over positions never
+    # land; duplicate-index scatters would be order-unspecified, a gather
+    # is deterministic). e = exclusive end of real positions this chunk.
+    e = jnp.minimum(limit, start + C)
+    last = (e - 1) - ((e - 1 - s_idx) % L)             # latest p == j (mod L)
+    w_valid = (last >= start)[:, None, None]           # p inside this chunk?
+    idx = jnp.clip(last - start, 0, C - 1)
+    kw = jnp.where(w_valid, k_new[0, idx].astype(cache["k"].dtype),
+                   cache["k"][slot])
+    vw = jnp.where(w_valid, v_new[0, idx].astype(cache["v"].dtype),
+                   cache["v"][slot])
+    k_cache = cache["k"].at[slot].set(kw)
+    v_cache = cache["v"].at[slot].set(vw)
+
+    t_new = cache["t"].at[slot].set(jnp.minimum(start + C, limit))
+    return (_chunk_out(params, cfg, out, lora, scale),
+            {"k": k_cache, "v": v_cache, "t": t_new})

@@ -314,14 +314,35 @@ def lm_loss(params: dict, cfg: ModelConfig, tokens: jax.Array,
 
 def init_cache(cfg: ModelConfig, batch: int, max_len: int,
                dtype=jnp.float32, *, specs_only: bool = False,
-               memory: Optional[jax.Array] = None, params=None) -> dict:
+               memory: Optional[jax.Array] = None, params=None,
+               paging: Optional[tuple] = None) -> dict:
     """Cache pytree. ``specs_only`` returns ShapeDtypeStructs (dry-run).
     Cross-attention KV is precomputed at prefill; here it is allocated
-    (zeros / specs) with the right shape."""
+    (zeros / specs) with the right shape.
+
+    ``paging`` = (n_pages, page_size) switches GLOBAL attention layers
+    (window=None) to the serving core's paged storage: their K/V live in
+    a shared physical page pool and the cache gains a top-level
+    ``"pages": {"table": (batch, P) int32}`` block table (P = max_len /
+    page_size logical pages per slot, one table shared by every paged
+    layer). Windowed layers keep their rolling caches — already O(window)
+    memory, and an identical code path keeps them bitwise-trivially equal
+    to the non-paged engine."""
     kv, hd = cfg.n_kv_heads, cfg.hd
     f = jax.ShapeDtypeStruct
+    if paging is not None:
+        n_pages, page_size = paging
+        if max_len % page_size != 0:
+            raise ValueError(f"paged cache needs max_len % page_size == 0, "
+                             f"got {max_len} % {page_size}")
 
     def attn_cache(window):
+        if paging is not None and window is None:
+            if specs_only:
+                return attn_mod.paged_cache_spec(cfg, batch, n_pages,
+                                                 page_size, dtype)
+            return attn_mod.init_paged_cache(cfg, batch, n_pages, page_size,
+                                             dtype)
         if specs_only:
             return attn_mod.cache_spec(cfg, batch, max_len, window, dtype)
         return attn_mod.init_cache(cfg, batch, max_len, window, dtype)
@@ -365,21 +386,27 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
                 is_leaf=lambda s: isinstance(s, jax.ShapeDtypeStruct))
         return jax.tree.map(lambda a: jnp.broadcast_to(a, (G, *a.shape)), one)
 
-    return {
+    cache = {
         "groups": [stack_caches(spec) for spec in cfg.pattern],
         "tail": [layer_cache(spec) for spec in cfg.tail_pattern],
     }
+    if paging is not None:
+        P = max_len // page_size
+        cache["pages"] = {"table": (f((batch, P), jnp.int32) if specs_only
+                                    else jnp.zeros((batch, P), jnp.int32))}
+    return cache
 
 
 def _decode_layer(p: dict, cfg: ModelConfig, spec: LayerSpec, x, cache, *,
-                  lora: Optional[dict], encdec_cross: bool):
+                  lora: Optional[dict], encdec_cross: bool,
+                  pages: Optional[dict] = None):
     lo = lora or {}
     new_cache = dict(cache)
     h = rmsnorm(x, p["norm1"], cfg.norm_eps)
     if spec.kind == ATTN:
         y, new_kv = attn_mod.attn_decode(p["attn"], cfg, h, cache["kv"],
                                          window=spec.window,
-                                         lora=lo.get("attn"))
+                                         lora=lo.get("attn"), pages=pages)
         new_cache["kv"] = new_kv
     elif spec.kind == CROSS:
         y, _ = attn_mod.attn_decode(p["attn"], cfg, h, {},
@@ -420,9 +447,13 @@ def _decode_layer(p: dict, cfg: ModelConfig, spec: LayerSpec, x, cache, *,
 
 def decode_step(params: dict, cfg: ModelConfig, tokens: jax.Array,
                 cache: dict, *, lora: Optional[dict] = None):
-    """tokens: (B, 1) -> (logits (B, 1, V_pad), new_cache)."""
+    """tokens: (B, 1) -> (logits (B, 1, V_pad), new_cache). A cache built
+    with ``paging`` carries its block table in ``cache["pages"]``; the
+    table is data threaded through unchanged (decode never re-maps
+    pages), so occupancy changes stay inside the one compiled step."""
     x = embed_tokens(params["embed"], tokens) * math.sqrt(cfg.d_model)
     encdec = cfg.family == "encdec"
+    pages = cache.get("pages")
     lo = lora or {}
     lo_groups = lo.get("groups", [None] * len(cfg.pattern))
     has_lora = any(g is not None for g in lo_groups)
@@ -433,7 +464,7 @@ def decode_step(params: dict, cfg: ModelConfig, tokens: jax.Array,
         for j, spec in enumerate(cfg.pattern):
             x, nc = _decode_layer(gp[j], cfg, spec, x, gc[j],
                                   lora=gl[j] if gl is not None else None,
-                                  encdec_cross=encdec)
+                                  encdec_cross=encdec, pages=pages)
             new_gc.append(nc)
         return x, new_gc
 
@@ -446,13 +477,106 @@ def decode_step(params: dict, cfg: ModelConfig, tokens: jax.Array,
     for j, spec in enumerate(cfg.tail_pattern):
         x, nc = _decode_layer(params["tail"][j], cfg, spec, x,
                               cache["tail"][j], lora=lo_tail[j],
-                              encdec_cross=encdec)
+                              encdec_cross=encdec, pages=pages)
         new_tail.append(nc)
 
     x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
     logits = unembed(x, params.get("unembed", params["embed"]),
                      tied=cfg.tie_embeddings, softcap=cfg.logit_softcap)
-    return logits, {"groups": new_group_caches, "tail": new_tail}
+    new_cache = {"groups": new_group_caches, "tail": new_tail}
+    if pages is not None:
+        new_cache["pages"] = pages
+    return logits, new_cache
+
+
+def supports_chunked_prefill(cfg: ModelConfig) -> bool:
+    """Chunked prefill covers pure-attention decoders (the serving-core
+    archs). Recurrent kinds would need sequential state threading per
+    chunk and enc-dec/VLM need memory plumbing — both fall back to the
+    engine's teacher-forced prefill-by-decode."""
+    specs = list(cfg.pattern) + list(cfg.tail_pattern)
+    return (cfg.family not in ("encdec", "vlm") and
+            all(s.kind == ATTN for s in specs))
+
+
+def _chunk_prefill_layer(p: dict, cfg: ModelConfig, spec: LayerSpec, x,
+                         cache, slot, start, limit, *,
+                         lora: Optional[dict], pages: Optional[dict]):
+    lo = lora or {}
+    new_cache = dict(cache)
+    h = rmsnorm(x, p["norm1"], cfg.norm_eps)
+    if spec.kind != ATTN:
+        raise NotImplementedError(
+            f"chunked prefill supports attention-only decoders, got layer "
+            f"kind {spec.kind!r} (see supports_chunked_prefill)")
+    kv = cache["kv"]
+    if "kp" in kv:
+        y, new_kv = attn_mod.attn_chunk_paged(
+            p["attn"], cfg, h, kv, pages["table"][slot], slot, start, limit,
+            lora=lo.get("attn"))
+    else:
+        y, new_kv = attn_mod.attn_chunk_rolling(
+            p["attn"], cfg, h, kv, slot, start, limit, lora=lo.get("attn"))
+    new_cache["kv"] = new_kv
+    x = x + y.astype(x.dtype)
+    if spec.ffn == DENSE:
+        h = rmsnorm(x, p["norm2"], cfg.norm_eps)
+        x = x + mlp(p["ffn"], h, cfg.act).astype(x.dtype)
+    elif spec.ffn == MOE:
+        h = rmsnorm(x, p["norm2"], cfg.norm_eps)
+        y, _ = moe_mod.moe_ffn(p["moe"], cfg, h)
+        x = x + y.astype(x.dtype)
+    return x, new_cache
+
+
+def chunk_prefill_step(params: dict, cfg: ModelConfig, tokens: jax.Array,
+                       cache: dict, slot, start, limit, *,
+                       lora: Optional[dict] = None) -> dict:
+    """Stream one slot's prompt chunk into the serving cache.
+
+    tokens: (1, C) — C is the engine's fixed chunk size (pad the final
+    chunk; pads past ``limit`` neither write KV nor produce used output).
+    slot / start / limit: () int32 — the batch row being prefilled, the
+    chunk's absolute position offset, and the total real prefill length.
+    Returns the new cache only (the engine teacher-forces the final
+    prompt token through decode_step, which emits the first logits), so
+    one compiled chunk trace serves every prompt length."""
+    if not supports_chunked_prefill(cfg):
+        raise NotImplementedError(
+            f"chunked prefill unsupported for {cfg.name} "
+            f"(attention-only decoders; see supports_chunked_prefill)")
+    x = embed_tokens(params["embed"], tokens) * math.sqrt(cfg.d_model)
+    pages = cache.get("pages")
+    lo = lora or {}
+    lo_groups = lo.get("groups", [None] * len(cfg.pattern))
+    has_lora = any(g is not None for g in lo_groups)
+
+    def body(x, xs):
+        gp, gc, gl = xs
+        new_gc = []
+        for j, spec in enumerate(cfg.pattern):
+            x, nc = _chunk_prefill_layer(
+                gp[j], cfg, spec, x, gc[j], slot, start, limit,
+                lora=gl[j] if gl is not None else None, pages=pages)
+            new_gc.append(nc)
+        return x, new_gc
+
+    xs = (params["groups"], cache["groups"],
+          lo_groups if has_lora else None)
+    x, new_group_caches = jax.lax.scan(body, x, xs, length=cfg.n_groups)
+
+    lo_tail = lo.get("tail", [None] * cfg.tail_len)
+    new_tail = []
+    for j, spec in enumerate(cfg.tail_pattern):
+        x, nc = _chunk_prefill_layer(params["tail"][j], cfg, spec, x,
+                                     cache["tail"][j], slot, start, limit,
+                                     lora=lo_tail[j], pages=pages)
+        new_tail.append(nc)
+
+    new_cache = {"groups": new_group_caches, "tail": new_tail}
+    if pages is not None:
+        new_cache["pages"] = pages
+    return new_cache
 
 
 def prefill(params: dict, cfg: ModelConfig, tokens: jax.Array, *,

@@ -1,0 +1,37 @@
+"""repro.serving — the paged-KV serving core.
+
+Three mechanisms, composed by `launch.serving.ServeEngine` and surfaced
+through `api.serving.ServingSession`:
+
+  `paging`     `PagePool` + `BlockTables`: page-granular KV storage for the
+               decode slots. Slot count and context length stop being a
+               compile-time memory wall — physical pages are allocated on
+               demand and the compiled decode step sees only a fixed-shape
+               block table (data, never a new trace).
+  `prefill`    `ChunkedPrefill`: long prompts stream into pages in
+               fixed-size compiled chunks (one trace per chunk shape)
+               instead of one tick per prompt token or one giant
+               per-length trace.
+  `scheduler`  `Scheduler` + `TenantQuota`: admission control and fairness
+               over adapters — per-tenant quotas, deficit-round-robin
+               between adapter queues, preemption-by-page-eviction when
+               the pool is exhausted, and request lifecycle metrics
+               (queue wait, TTFT, preemptions).
+
+Layering: imports models/kernels/configs only; `launch.serving` (the
+engine) and `api.serving` (the session) sit above.
+"""
+from repro.serving.paging import BlockTables, PagePool
+from repro.serving.prefill import ChunkedPrefill
+from repro.serving.scheduler import (QuotaExceeded, Request, Scheduler,
+                                     TenantQuota)
+
+__all__ = [
+    "BlockTables",
+    "ChunkedPrefill",
+    "PagePool",
+    "QuotaExceeded",
+    "Request",
+    "Scheduler",
+    "TenantQuota",
+]

@@ -1,0 +1,224 @@
+"""Admission and fairness over adapter queues.
+
+The engine used to own a single FIFO deque; that is the degenerate case
+of this scheduler (one queue, no quotas). Here requests are queued *per
+adapter* and admission runs deficit-round-robin (DRR) between the
+queues, so one tenant flooding the engine cannot starve the others: each
+non-empty queue earns ``quantum`` credit per rotation and releases one
+request when its deficit covers the cost (uniform cost 1 — requests are
+admitted one slot at a time). With a single queue this is exactly FIFO,
+which keeps the pre-scheduler engine behavior bit-for-bit.
+
+`TenantQuota` bounds a tenant two ways: ``max_queued`` rejects at submit
+time (`QuotaExceeded`), ``max_active`` holds a queue back at admission
+while the tenant already occupies that many slots.
+
+The scheduler also owns the request registry and lifecycle metrics:
+every `Request` records submit/admit/first-token/done both in engine
+ticks and wall-clock, plus its preemption count; `summary()` aggregates
+queue wait, TTFT, and latency percentiles for the traffic benchmark.
+
+Policy only — no jax, no cache. Page eviction *mechanics* live in
+`launch.serving.ServeEngine`; this module decides who queues and who
+runs next.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Union
+
+import numpy as np
+
+AdapterKey = Union[str, int, None]
+
+
+@dataclass
+class Request:
+    """One generation request: prompt tokens, generation budget, the
+    (optional) pool adapter that should serve it, and its lifecycle
+    record (ticks + wall-clock for queue wait / TTFT / completion)."""
+    rid: int
+    prompt: np.ndarray                   # (S,) int32
+    max_new: int = 32
+    eos_id: Optional[int] = None
+    adapter: AdapterKey = None           # pool row / name; None = base
+    tokens_out: list = field(default_factory=list)
+    done: bool = False
+    # lifecycle (filled in by the scheduler / engine)
+    submit_tick: int = 0
+    admit_tick: Optional[int] = None
+    first_token_tick: Optional[int] = None
+    done_tick: Optional[int] = None
+    submit_time: float = 0.0
+    first_token_time: Optional[float] = None
+    done_time: Optional[float] = None
+    preemptions: int = 0
+
+    @property
+    def queue_wait_ticks(self) -> Optional[int]:
+        if self.admit_tick is None:
+            return None
+        return self.admit_tick - self.submit_tick
+
+    @property
+    def ttft_ticks(self) -> Optional[int]:
+        if self.first_token_tick is None:
+            return None
+        return self.first_token_tick - self.submit_tick
+
+
+@dataclass(frozen=True)
+class TenantQuota:
+    """Per-adapter limits: ``max_queued`` rejects submits past the queue
+    bound, ``max_active`` caps simultaneously held slots."""
+    max_active: Optional[int] = None
+    max_queued: Optional[int] = None
+
+
+class QuotaExceeded(RuntimeError):
+    """Submit rejected: the adapter's queue is at its ``max_queued``."""
+
+
+def _stats(xs: List[float]) -> Dict[str, float]:
+    if not xs:
+        return {"n": 0}
+    arr = np.asarray(xs, np.float64)
+    return {"n": int(arr.size),
+            "mean": float(arr.mean()),
+            "p50": float(np.percentile(arr, 50)),
+            "p99": float(np.percentile(arr, 99)),
+            "max": float(arr.max())}
+
+
+class Scheduler:
+    """Deficit-round-robin admission over per-adapter queues."""
+
+    def __init__(self, quotas: Optional[Dict[AdapterKey, TenantQuota]] = None,
+                 quantum: float = 1.0, clock=time.perf_counter):
+        self.quotas: Dict[AdapterKey, TenantQuota] = dict(quotas or {})
+        self.quantum = float(quantum)
+        self.clock = clock
+        self.requests: Dict[int, Request] = {}
+        self._queues: Dict[AdapterKey, deque] = {}
+        self._deficit: Dict[AdapterKey, float] = {}
+        self._order: List[AdapterKey] = []   # RR rotation, insertion order
+        self._rr = 0
+        self.n_submitted = 0
+        self.n_completed = 0
+        self.n_preemptions = 0
+
+    # -- queue state ----------------------------------------------------
+    def _queue_for(self, key: AdapterKey) -> deque:
+        if key not in self._queues:
+            self._queues[key] = deque()
+            self._deficit[key] = 0.0
+            self._order.append(key)
+        return self._queues[key]
+
+    @property
+    def n_queued(self) -> int:
+        return sum(len(q) for q in self._queues.values())
+
+    def queued_for(self, key: AdapterKey) -> int:
+        q = self._queues.get(key)
+        return len(q) if q is not None else 0
+
+    def queued_requests(self) -> List[Request]:
+        """Every queued request, RR-queue order (for introspection)."""
+        out: List[Request] = []
+        for key in self._order:
+            out.extend(self._queues[key])
+        return out
+
+    # -- lifecycle ------------------------------------------------------
+    def submit(self, req: Request, tick: int = 0) -> None:
+        """Enqueue; raises `QuotaExceeded` past the tenant's queue bound
+        (the request is NOT registered in that case)."""
+        quota = self.quotas.get(req.adapter)
+        if quota is not None and quota.max_queued is not None and \
+                self.queued_for(req.adapter) >= quota.max_queued:
+            raise QuotaExceeded(
+                f"adapter {req.adapter!r}: {quota.max_queued} requests "
+                f"already queued")
+        req.submit_tick = tick
+        req.submit_time = self.clock()
+        self.requests[req.rid] = req
+        self._queue_for(req.adapter).append(req)
+        self.n_submitted += 1
+
+    def requeue_front(self, req: Request) -> None:
+        """Preempted request back to the head of its queue (it holds
+        admission priority — it already ran once)."""
+        req.preemptions += 1
+        self.n_preemptions += 1
+        self._queue_for(req.adapter).appendleft(req)
+
+    def next_request(self, active_counts: Dict[AdapterKey, int]
+                     ) -> Optional[Request]:
+        """DRR pick: rotate over the adapter queues from the RR cursor;
+        each visited non-empty queue earns ``quantum``, the first whose
+        deficit covers cost 1 (and whose tenant is under ``max_active``)
+        releases its head. None when nothing is admissible. The caller
+        marks admission (`mark_admitted`) once placement succeeds, or
+        `push_front`s the request back."""
+        n = len(self._order)
+        for step in range(n):
+            key = self._order[(self._rr + step) % n]
+            q = self._queues[key]
+            if not q:
+                self._deficit[key] = 0.0   # classic DRR: idle queues
+                continue                   # hold no credit
+            quota = self.quotas.get(key)
+            if quota is not None and quota.max_active is not None and \
+                    active_counts.get(key, 0) >= quota.max_active:
+                continue
+            self._deficit[key] += self.quantum
+            if self._deficit[key] >= 1.0:
+                self._deficit[key] -= 1.0
+                req = q.popleft()
+                self._rr = (self._rr + step + 1) % n
+                return req
+        return None
+
+    def push_front(self, req: Request) -> None:
+        """Un-pop: the engine could not place the request after all (no
+        pages free at admission). Not a preemption — nothing ran."""
+        self._queue_for(req.adapter).appendleft(req)
+
+    def mark_admitted(self, req: Request, tick: int) -> None:
+        req.admit_tick = tick
+
+    def mark_first_token(self, req: Request, tick: int) -> None:
+        if req.first_token_tick is None:
+            req.first_token_tick = tick
+            req.first_token_time = self.clock()
+
+    def mark_done(self, req: Request, tick: int) -> None:
+        req.done_tick = tick
+        req.done_time = self.clock()
+        self.n_completed += 1
+
+    # -- metrics --------------------------------------------------------
+    def summary(self) -> dict:
+        """Lifecycle aggregates over every request seen so far."""
+        reqs = list(self.requests.values())
+        waits = [float(r.queue_wait_ticks) for r in reqs
+                 if r.queue_wait_ticks is not None]
+        ttfts = [float(r.ttft_ticks) for r in reqs
+                 if r.ttft_ticks is not None]
+        ttft_s = [r.first_token_time - r.submit_time for r in reqs
+                  if r.first_token_time is not None]
+        lat_s = [r.done_time - r.submit_time for r in reqs
+                 if r.done_time is not None]
+        return {
+            "submitted": self.n_submitted,
+            "completed": self.n_completed,
+            "queued": self.n_queued,
+            "preemptions": self.n_preemptions,
+            "queue_wait_ticks": _stats(waits),
+            "ttft_ticks": _stats(ttfts),
+            "ttft_s": _stats(ttft_s),
+            "latency_s": _stats(lat_s),
+        }

@@ -294,3 +294,85 @@ ENTRY %main (a: f32[8,8]) -> f32[8,8] {
     assert rows[0].occurrences == 5
     assert "dot_general" in rows[0].op_name
     assert "GB" in format_table(rows)
+
+
+# ---------------------------------------------------------------------------
+# request-lifecycle edge cases (scheduler-backed engine)
+# ---------------------------------------------------------------------------
+
+def test_submit_past_capacity_queues_then_drains(served):
+    """More requests than slots: the excess queues (visible via the
+    scheduler), admission backfills as slots free, everything completes
+    in submission order for a single queue."""
+    cfg, params = served
+    rng = np.random.default_rng(11)
+    prompts = [rng.integers(0, cfg.vocab_size, size=3).astype(np.int32)
+               for _ in range(5)]
+    eng = ServeEngine(params, cfg, n_slots=2, max_len=32)
+    rids = [eng.submit(p, max_new=3) for p in prompts]
+    assert eng.scheduler.n_queued == 5
+    eng.tick()
+    assert eng.scheduler.n_queued == 3          # 2 admitted, 3 waiting
+    assert len(eng.queue) == 3                  # the queue view agrees
+    eng.run()
+    assert eng.scheduler.n_queued == 0
+    assert all(eng.requests[r].done for r in rids)
+    admits = [eng.requests[r].admit_tick for r in rids]
+    assert admits == sorted(admits)             # FIFO admission order
+
+
+def test_eos_recycles_slot_mid_stream(served):
+    """A request hitting its eos_id mid-stream frees the slot THAT tick;
+    the next queued request is admitted on the following tick and decodes
+    as if it had a fresh engine."""
+    cfg, params = served
+    rng = np.random.default_rng(12)
+    p1 = rng.integers(0, cfg.vocab_size, size=4).astype(np.int32)
+    p2 = rng.integers(0, cfg.vocab_size, size=4).astype(np.int32)
+    # find the token p1 actually emits first, use it as the eos
+    probe = ServeEngine(params, cfg, n_slots=1, max_len=64)
+    r = probe.submit(p1, max_new=1)
+    probe.run()
+    eos = probe.requests[r].tokens_out[0]
+
+    eng = ServeEngine(params, cfg, n_slots=1, max_len=64)
+    r1 = eng.submit(p1, max_new=10, eos_id=eos)
+    r2 = eng.submit(p2, max_new=4)
+    while not eng.requests[r1].done:
+        eng.tick()
+    assert eng.requests[r1].tokens_out == [eos]     # stopped at eos, not 10
+    assert eng.slots[0].req is None                 # freed immediately
+    eng.run()
+    assert eng.requests[r2].tokens_out == _reference_generate(
+        params, cfg, p2, 4)
+
+
+def test_hot_swap_applies_to_still_queued_requests(served, adapter_bank):
+    """update_adapter while requests for that adapter are still QUEUED:
+    they decode with the new weights once admitted (the pool is read per
+    tick, never snapshotted at submit)."""
+    cfg, params = served
+    rng = np.random.default_rng(13)
+    prompt = rng.integers(0, cfg.vocab_size, size=4).astype(np.int32)
+    new_w = jax.tree.map(lambda x: 3.0 * jnp.ones_like(x[..., 0, :, :]),
+                         adapter_bank)
+
+    # reference: engine whose pool ALREADY holds the new weights
+    pool_ref = AdapterPool.from_stacked(adapter_bank, consensus=False)
+    pool_ref.update("client_1", new_w)
+    s_ref = ServingSession(model_cfg=cfg, params=params, adapters=pool_ref,
+                           n_slots=1, max_len=64)
+    want = s_ref.generate(prompt, adapter="client_1", max_new=4)
+
+    pool = AdapterPool.from_stacked(adapter_bank, consensus=False)
+    s = ServingSession(model_cfg=cfg, params=params, adapters=pool,
+                       n_slots=1, max_len=64)
+    blocker = s.submit(prompt, adapter="client_0", max_new=2)
+    queued = s.submit(prompt, adapter="client_1", max_new=4)
+    s.tick()                                       # blocker holds the slot
+    assert s.engine.scheduler.n_queued == 1
+    s.update_adapter("client_1", new_w)            # swap while queued
+    s.run()
+    assert s.result(queued) == want
+    assert s.result(blocker) != want               # old weights elsewhere
+    assert s.compile_count == 1
