@@ -92,6 +92,9 @@ def _multihost(doc) -> Metrics:
             out[f"multihost_{n}p_rounds_per_s"] = (
                 float(row["rounds_per_s"]), "higher")
             continue
+        quant = row.get("mix_quant", "off")
+        if quant != "off":         # quantized rows track separately
+            mode = f"{mode}_{quant}"
         out[f"multihost_{mode}_{n}p_rounds_per_s"] = (
             float(row["rounds_per_s"]), "higher")
         if n > 1 and "scale_vs_1p" in row:

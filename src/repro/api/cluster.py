@@ -124,6 +124,12 @@ class ClusterSession(Session):
                                      np.asarray(self.opt_state.step)),
             mu=self._shard_client_tree(self.opt_state.mu),
             nu=self._shard_client_tree(self.opt_state.nu))
+        if self.ef is not None:
+            # the error-feedback buffer is (m, cols) with the client axis
+            # leading — shard it like the round's other client state
+            ef = np.asarray(self.ef)
+            self.ef = multihost.shard_clients(
+                self.mesh, ef[self._client_slc], ef.shape, axis=0)
 
     def reset_state(self) -> None:
         super().reset_state()
@@ -166,6 +172,8 @@ class ClusterSession(Session):
                     "nu": multihost.to_host(self.opt_state.nu, self.mesh)},
             "meta": {"round": np.int64(self.t)},
         }
+        if self.ef is not None:
+            state["ef"] = multihost.to_host(self.ef, self.mesh)
         if multihost.is_primary():
             save_pytree(path, state)
         multihost.sync("ckpt-save")

@@ -35,8 +35,9 @@ MIX_IMPLS = ("planned", "per_leaf", "concat")
 FLAT_LOWERINGS = ("auto", "flat", "per_segment")
 MIX_GATHER_MODES = ("auto", "on", "off")
 MIX_COMM_MODES = ("dense", "sparse", "sparse_overlap")
+MIX_QUANT_MODES = ("off", "int8", "fp8")
 
-_KEY_VERSION = 5   # bump when semantics of any field change
+_KEY_VERSION = 6   # bump when semantics of any field change
 
 
 @dataclass(frozen=True)
@@ -82,6 +83,10 @@ class DFLConfig:
                                  # "sparse" (topology-support exchange,
                                  # bitwise equal) | "sparse_overlap"
                                  # (one-round-delayed neighbor terms)
+    mix_quant: str = "off"       # compressed gossip: quantize the sparse
+                                 # halo exchange ("int8" | "fp8") with
+                                 # per-client error feedback; "off" keeps
+                                 # the fp32 wire format bit-for-bit
     donate: bool = False         # donate lora/opt buffers (in-place round)
 
     # -- seeds / data -------------------------------------------------------
@@ -143,6 +148,13 @@ class DFLConfig:
         check(self.mix_comm == "dense" or self.mix_impl == "planned",
               f"mix_comm {self.mix_comm!r} lowers through the MixPlan "
               f"flat layout; it requires mix_impl='planned'")
+        check(self.mix_quant in MIX_QUANT_MODES,
+              f"unknown mix_quant {self.mix_quant!r}; "
+              f"known: {MIX_QUANT_MODES}")
+        check(self.mix_quant == "off" or self.mix_comm != "dense",
+              f"mix_quant {self.mix_quant!r} compresses the sparse halo "
+              f"exchange; it requires mix_comm='sparse' or "
+              f"'sparse_overlap'")
         check(self.n_clients >= 2, "n_clients must be >= 2")
         check(0.0 < self.p <= 1.0, "p must be in (0, 1]")
         check(self.rounds > 0, "rounds must be positive")

@@ -20,6 +20,7 @@ def build_round(loss_fn: Callable, optimizer: AdamW, *,
                 mix_flat_lowering: Optional[str] = None,
                 mix_gather: bool = False,
                 mix_comm: str = "dense",
+                mix_quant: str = "off",
                 comm_plan=None,
                 donate: bool = False):
     """Build round_fn(base, lora, opt_state, batch, W, masks).
@@ -36,11 +37,16 @@ def build_round(loss_fn: Callable, optimizer: AdamW, *,
     `repro.dist.comm.CommPlan`), and "sparse_overlap" delays the
     off-diagonal mixing terms by one round so the exchange overlaps with
     local compute.
+    mix_quant ("off" | "int8" | "fp8") compresses the sparse halo
+    exchange with per-client error feedback; quant round functions take
+    an extra ``ef`` buffer and return ``ef_new`` (see
+    `repro.core.fedtrain.make_dfl_round`).
     """
     return make_dfl_round(loss_fn, optimizer, local_steps=local_steps,
                           mix_impl=mix_impl,
                           mix_flat_lowering=mix_flat_lowering,
                           mix_gather=mix_gather,
                           mix_comm=mix_comm,
+                          mix_quant=mix_quant,
                           comm_plan=comm_plan,
                           donate=donate)

@@ -39,6 +39,7 @@ from repro.checkpoint import load_pytree, save_pytree
 from repro.configs import get_config
 from repro.core.alternating import RoundMasks
 from repro.core.diagnostics import consensus_stats
+from repro.core import mixing
 from repro.core.lora import build_lora_tree
 from repro.core.topology import Topology, make_topology, \
     optimal_switching_interval
@@ -174,7 +175,7 @@ def _build_key(cfg: DFLConfig, comm_plan: Optional[CommPlan] = None):
             cfg.feature_shift, cfg.n_clients, cfg.lr, cfg.local_steps,
             cfg.mix_impl, cfg.mix_flat_lowering,
             _resolve_mix_gather(cfg.mix_gather), cfg.donate, cfg.init_seed,
-            cfg.mix_comm,
+            cfg.mix_comm, cfg.mix_quant,
             comm_plan.signature() if comm_plan is not None else None)
 
 
@@ -230,6 +231,7 @@ def _build(cfg: DFLConfig, model_cfg, loss_fn) -> _Built:
                            mix_flat_lowering=cfg.mix_flat_lowering,
                            mix_gather=_resolve_mix_gather(cfg.mix_gather),
                            mix_comm=cfg.mix_comm,
+                           mix_quant=cfg.mix_quant,
                            comm_plan=comm_plan,
                            donate=cfg.donate)
     if not cfg.donate:
@@ -370,6 +372,13 @@ class Session:
             lora0 = jax.tree.map(lambda x: jnp.array(x, copy=True), lora0)
         self.lora = lora0
         self.opt_state: AdamWState = self.opt.init(self.lora)
+        # compressed gossip carries the per-client error-feedback
+        # accumulator as round state, zero at round 0 (the MixPlan's
+        # unpadded (m, cols) flat layout)
+        self.ef = None
+        if self.config.mix_quant != "off":
+            plan = mixing.get_mix_plan(self.lora)
+            self.ef = jnp.zeros((plan.m, plan.cols), jnp.float32)
         self._batches = self._raw_batch_iter()
         self.t = 0
         self.last_metrics = None
@@ -431,10 +440,17 @@ class Session:
         W_np = self.topo_schedule.next_w(t)
         masks = self.schedule.next_masks(
             t, {"W": W_np, "round": t, "session": self})
-        self.lora, self.opt_state, metrics = self.round_fn(
-            self.base, self.lora, self.opt_state, batch,
-            self._device_scalar_inputs(np.asarray(W_np, np.float32)),
-            self._device_scalar_inputs(masks.as_array()))
+        W_dev = self._device_scalar_inputs(np.asarray(W_np, np.float32))
+        masks_dev = self._device_scalar_inputs(masks.as_array())
+        if self.ef is not None:
+            # quantized round: the error-feedback buffer threads through
+            self.lora, self.opt_state, metrics, self.ef = self.round_fn(
+                self.base, self.lora, self.opt_state, batch, W_dev,
+                masks_dev, self.ef)
+        else:
+            self.lora, self.opt_state, metrics = self.round_fn(
+                self.base, self.lora, self.opt_state, batch, W_dev,
+                masks_dev)
         self.last_metrics = metrics
         # t advances BEFORE callbacks fire: a checkpoint taken inside a
         # callback resumes after the round it just observed
@@ -498,12 +514,15 @@ class Session:
     # -- checkpoint / resume ------------------------------------------------
     def save(self, path: str) -> None:
         """Checkpoint lora + optimizer state + round counter (flat npz)."""
-        save_pytree(path, {
+        tree = {
             "lora": self.lora,
             "opt": {"step": self.opt_state.step, "mu": self.opt_state.mu,
                     "nu": self.opt_state.nu},
             "meta": {"round": np.int64(self.t)},
-        })
+        }
+        if self.ef is not None:
+            tree["ef"] = self.ef
+        save_pytree(path, tree)
 
     def restore(self, path: str) -> int:
         """Resume from a checkpoint: restores state AND replays the
@@ -537,5 +556,7 @@ class Session:
             step=jnp.asarray(opt["step"]),
             mu=jax.tree.map(jnp.asarray, opt["mu"]),
             nu=jax.tree.map(jnp.asarray, opt["nu"]))
+        if self.ef is not None and "ef" in tree:
+            self.ef = jnp.asarray(tree["ef"])
         self.t = saved_round
         return saved_round

@@ -49,6 +49,7 @@ def make_dfl_round(loss_fn: Callable, optimizer: AdamW, *,
                    mix_flat_lowering: Optional[str] = None,
                    mix_gather: bool = False,
                    mix_comm: str = "dense",
+                   mix_quant: str = "off",
                    comm_plan=None,
                    donate: bool = False):
     """Build the jit-able round function.
@@ -86,6 +87,14 @@ def make_dfl_round(loss_fn: Callable, optimizer: AdamW, *,
     bit-for-bit equal to dense; "sparse_overlap" additionally feeds the
     off-diagonal terms the ROUND-INPUT state (one-round-delayed gossip),
     so the halo exchange overlaps with the local steps.
+    ``mix_quant`` ("off" | "int8" | "fp8") compresses the sparse halo
+    exchange: off-diagonal source rows ship as a quantized payload + one
+    f32 per-row scale, with the per-client quantization residual carried
+    as error feedback. When on, the round signature changes to
+    ``round_fn(base, lora, opt_state, batch, W, masks, ef)
+    -> (lora, opt_state, metrics, ef_new)`` where ``ef`` is the (m, P)
+    f32 error-feedback buffer of the MixPlan flat layout. "off" keeps the
+    exact unquantized round function (same signature, same jaxpr).
     With ``donate`` the returned function is jitted with the lora/opt_state
     buffers donated (in-place round at production scale) — callers must
     then treat the passed-in trees as consumed.
@@ -96,12 +105,20 @@ def make_dfl_round(loss_fn: Callable, optimizer: AdamW, *,
     if mix_comm != "dense" and mix_impl != "planned":
         raise ValueError("sparse mix_comm lowers through the MixPlan flat "
                          "layout; it requires mix_impl='planned'")
+    if mix_quant not in mixing.MIX_QUANT_MODES:
+        raise ValueError(f"unknown mix_quant {mix_quant!r}; "
+                         f"known: {mixing.MIX_QUANT_MODES}")
+    if mix_quant != "off" and mix_comm == "dense":
+        raise ValueError("mix_quant compresses the sparse halo exchange; "
+                         "it requires mix_comm='sparse' or 'sparse_overlap'")
     mix = _MIX_IMPLS[mix_impl]
     if mix_impl == "planned":
         mix = partial(mixing.mix_tree_planned,
                       flat_lowering=mix_flat_lowering)
 
-    def round_fn(base_params, lora, opt_state: AdamWState, batch, W, masks):
+    def _local_phase(base_params, lora, opt_state, batch, masks):
+        """The local-steps scan — shared between the plain and the
+        quantized round functions (identical ops, identical jaxpr)."""
         mask_fn = _ab_mask(masks)
 
         def local_step(carry, micro):
@@ -123,8 +140,19 @@ def make_dfl_round(loss_fn: Callable, optimizer: AdamW, *,
             lo = shard_lora_tree(lo)
             return (lo, opt), (loss, per)
 
-        (lora_new, opt_new), (losses, per_client) = jax.lax.scan(
-            local_step, (lora, opt_state), batch)
+        return jax.lax.scan(local_step, (lora, opt_state), batch)
+
+    def _metrics(losses, per_client):
+        # loss_per_client (local_steps, n) is replicated so every process
+        # can host-read it: the session reduces it in ONE fixed order, so
+        # the reported loss is bitwise identical across process grids
+        # (the in-graph scalars may reduce in a grid-dependent order)
+        return {"loss": jnp.mean(losses), "loss_per_step": losses,
+                "loss_per_client": replicated(per_client)}
+
+    def round_fn(base_params, lora, opt_state: AdamWState, batch, W, masks):
+        (lora_new, opt_new), (losses, per_client) = _local_phase(
+            base_params, lora, opt_state, batch, masks)
 
         # Joint mixing (Algorithm 1 lines 7–9): masks select per method.
         if mix_comm == "dense":
@@ -139,14 +167,26 @@ def make_dfl_round(loss_fn: Callable, optimizer: AdamW, *,
                 lora_prev=(lora if mix_comm == "sparse_overlap" else None),
                 flat_lowering=mix_flat_lowering)
         lora_new = shard_lora_tree(lora_new)
-        # loss_per_client (local_steps, n) is replicated so every process
-        # can host-read it: the session reduces it in ONE fixed order, so
-        # the reported loss is bitwise identical across process grids
-        # (the in-graph scalars may reduce in a grid-dependent order)
-        metrics = {"loss": jnp.mean(losses), "loss_per_step": losses,
-                   "loss_per_client": replicated(per_client)}
+        metrics = _metrics(losses, per_client)
         return lora_new, opt_new, metrics
 
+    def round_fn_quant(base_params, lora, opt_state: AdamWState, batch, W,
+                       masks, ef):
+        (lora_new, opt_new), (losses, per_client) = _local_phase(
+            base_params, lora, opt_state, batch, masks)
+
+        lora_new, ef_new = mixing.mix_tree_sparse(
+            W, lora_new, masks[2], masks[3], comm_plan=comm_plan,
+            lora_prev=(lora if mix_comm == "sparse_overlap" else None),
+            flat_lowering=mix_flat_lowering, quant=mix_quant, ef=ef)
+        lora_new = shard_lora_tree(lora_new)
+        metrics = _metrics(losses, per_client)
+        return lora_new, opt_new, metrics, ef_new
+
+    if mix_quant != "off":
+        if donate:
+            return jax.jit(round_fn_quant, donate_argnums=(1, 2, 6))
+        return round_fn_quant
     if donate:
         return jax.jit(round_fn, donate_argnums=(1, 2))
     return round_fn

@@ -40,10 +40,22 @@ Four lowerings, equal numerics (bit-for-bit at binary masks):
                      local steps, so XLA can overlap communication with
                      compute; only the diagonal stays fresh, making the
                      semantics independent of the process count.
+
+Compressed gossip (``quant`` on the sparse lowerings): the exchanged
+source rows are quantized per row to int8 (or fp8) with one f32 scale per
+row — the halo then moves ~1/4 of the fp32 bytes — while each client's own
+diagonal contribution stays full precision. A per-client error-feedback
+accumulator (EF21-style) carries the quantization residual into the next
+round's payload, e_j' = (x_j + e_j) − Q(x_j + e_j), so the compression
+noise stays summable and the consensus contraction survives (asserted
+against the Lemma A.10 budget in the conformance tier). Quantization is
+per-row and the degenerate path quantizes ALL off-diagonal sources, so
+single- and multi-process runs still agree bit-for-bit.
 """
 from __future__ import annotations
 
 import math
+from collections import OrderedDict
 from dataclasses import dataclass
 from typing import Any, Optional
 
@@ -62,6 +74,18 @@ def mix_leaf(W: jax.Array, leaf: jax.Array) -> jax.Array:
     return jnp.einsum("ij,...jdr->...idr", W.astype(leaf.dtype), leaf)
 
 
+def _leaf_mask_name(path) -> str:
+    """The a/b factor name of a LoRA leaf path. Any other leaf name is a
+    malformed tree — silently mixing it with mask_b (the historical
+    fallback) hid real bugs, so it raises instead."""
+    name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+    if name not in ("a", "b"):
+        raise ValueError(
+            f"LoRA leaf {jax.tree_util.keystr(path)!r} is named {name!r}; "
+            f"gossip mixing is defined for 'a'/'b' factor leaves only")
+    return name
+
+
 def mix_tree(W: jax.Array, lora, mask_a: jax.Array, mask_b: jax.Array):
     """Gossip-mix the a-leaves with weight mask_a and b-leaves with mask_b.
 
@@ -70,8 +94,7 @@ def mix_tree(W: jax.Array, lora, mask_a: jax.Array, mask_b: jax.Array):
     the beyond-paper damped-mixing variant).
     """
     def one(path, leaf):
-        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
-        mask = mask_a if name == "a" else mask_b
+        mask = mask_a if _leaf_mask_name(path) == "a" else mask_b
         mixed = mix_leaf(W, leaf)
         return (mask * mixed + (1.0 - mask) * leaf).astype(leaf.dtype)
 
@@ -103,8 +126,7 @@ def mix_tree_concat(W: jax.Array, lora, mask_a: jax.Array, mask_b: jax.Array):
         lead = leaf.shape[:-3]
         restored = chunk.reshape(m, *lead, *leaf.shape[-2:])
         restored = jnp.moveaxis(restored, 0, len(lead))
-        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
-        mask = mask_a if name == "a" else mask_b
+        mask = mask_a if _leaf_mask_name(path) == "a" else mask_b
         out.append((mask * restored + (1.0 - mask) * leaf).astype(leaf.dtype))
     return jax.tree_util.tree_unflatten(treedef, out)
 
@@ -150,13 +172,22 @@ class MixPlan:
         return mask_a * ind + mask_b * (1.0 - ind)
 
 
-_PLAN_CACHE: dict = {}
+# LRU-bounded plan cache: keyed on treedef/shape signatures, which a
+# long-lived serving process can churn through indefinitely (every new
+# adapter-pool layout is a fresh key) — unbounded growth was a leak.
+_PLAN_CACHE: "OrderedDict" = OrderedDict()
+_PLAN_CACHE_MAX = 64
 _PLAN_BUILDS = [0]
 
 
 def plan_builds() -> int:
     """How many MixPlans have been constructed (test/diagnostic hook)."""
     return _PLAN_BUILDS[0]
+
+
+def clear_mix_plans() -> None:
+    """Drop every cached MixPlan (long-lived processes, tests)."""
+    _PLAN_CACHE.clear()
 
 
 def build_mix_plan(lora, *, bp: int = _KERNEL_BP) -> MixPlan:
@@ -168,7 +199,7 @@ def build_mix_plan(lora, *, bp: int = _KERNEL_BP) -> MixPlan:
     slots, ind_parts = [], []
     off = 0
     for path, leaf in leaves_p:
-        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        name = _leaf_mask_name(path)
         cols = math.prod(leaf.shape) // m
         slots.append(_LeafSlot(offset=off, cols=cols,
                                lead=tuple(leaf.shape[:-3]),
@@ -194,6 +225,10 @@ def get_mix_plan(lora, *, bp: int = _KERNEL_BP) -> MixPlan:
     plan = _PLAN_CACHE.get(key)
     if plan is None:
         plan = _PLAN_CACHE[key] = build_mix_plan(lora, bp=bp)
+        while len(_PLAN_CACHE) > _PLAN_CACHE_MAX:
+            _PLAN_CACHE.popitem(last=False)      # evict least-recently-used
+    else:
+        _PLAN_CACHE.move_to_end(key)
     return plan
 
 
@@ -333,6 +368,51 @@ def _flat_buffer(leaves, m: int):
         [jnp.moveaxis(x, -3, 0).reshape(m, -1) for x in leaves], axis=1)
 
 
+# ---------------------------------------------------------------------------
+# compressed gossip: per-row quantization + error feedback
+# ---------------------------------------------------------------------------
+
+MIX_QUANT_MODES = ("off", "int8", "fp8")
+
+
+def _quant_spec(quant: str):
+    """(payload dtype, max representable magnitude) of a quant mode."""
+    if quant == "int8":
+        return jnp.int8, 127.0
+    if quant == "fp8":
+        return jnp.float8_e4m3fn, 448.0
+    raise ValueError(f"unknown mix quant mode {quant!r}; "
+                     f"known: {MIX_QUANT_MODES}")
+
+
+def quantize_rows(x: jax.Array, quant: str):
+    """Per-row scaled quantization of a (rows, cols) buffer.
+
+    Returns (q, scale): q is int8 (round-to-nearest, clipped symmetric)
+    or fp8 (e4m3) with one f32 ``scale`` per row chosen so the row's max
+    magnitude maps to the top of the representable range. All-zero rows
+    quantize to zeros under scale 1 (no 0/0). Row-independent by
+    construction, so per-shard quantization of a block equals the global
+    quantization of those rows — the property the bitwise grid-parity of
+    `mix_tree_sparse` rests on.
+    """
+    dtype, qmax = _quant_spec(quant)
+    x32 = x.astype(jnp.float32)
+    rowmax = jnp.max(jnp.abs(x32), axis=1, keepdims=True)
+    scale = jnp.where(rowmax > 0.0, rowmax / qmax, 1.0)
+    y = x32 / scale
+    if dtype == jnp.int8:
+        q = jnp.clip(jnp.round(y), -qmax, qmax).astype(jnp.int8)
+    else:
+        q = y.astype(dtype)
+    return q, scale
+
+
+def dequantize_rows(q: jax.Array, scale: jax.Array) -> jax.Array:
+    """f32 reconstruction of `quantize_rows` output: q * scale."""
+    return q.astype(jnp.float32) * scale.astype(jnp.float32)
+
+
 def _split_diag(w_rows, row0):
     """(w_off_rows, w_diag) of mixing rows [row0, row0+r): the diagonal
     coefficient per row, and the rows with the diagonal zeroed. Shared by
@@ -373,9 +453,32 @@ def _sparse_contract(w_rows, x_rows, z, mask_a, mask_b, plan: MixPlan,
     return jnp.concatenate(outs, axis=1)
 
 
+def _sparse_contract_quant(w_off, x_rows, zq, zscale, mask_a, mask_b,
+                           plan: MixPlan, use_flat: bool, w_diag):
+    """Blend-mixed rows from a QUANTIZED source buffer.
+
+    w_off: (r, m) mixing rows with the diagonal zeroed; x_rows: (r, cols)
+    fresh full-precision local rows; zq/zscale: the (m, cols)/(m, 1)
+    quantized source rows + per-row scales (rows outside the support are
+    zero and meet exact-zero W entries); w_diag: (r, 1) diagonal
+    coefficients applied to the FRESH rows — the local contribution never
+    pays quantization noise. The flat lowering fuses the dequantize into
+    the `gossip_mix_quant` kernel sweep; per-segment dequantizes once and
+    reuses the per-slot dots.
+    """
+    if use_flat:
+        seg = plan.segment_mask(mask_a, mask_b)[:, :plan.cols]
+        seg = jnp.asarray(seg).astype(x_rows.dtype)
+        return ops.gossip_mix_quant(w_off, zq, zscale, x_rows, w_diag, seg)
+    z = dequantize_rows(zq, zscale).astype(x_rows.dtype)
+    return _sparse_contract(w_off, x_rows, z, mask_a, mask_b, plan,
+                            use_flat=False, w_diag=w_diag)
+
+
 def mix_tree_sparse(W: jax.Array, lora, mask_a, mask_b, *, comm_plan,
                     lora_prev=None, plan: Optional[MixPlan] = None,
-                    flat_lowering: Optional[str] = None):
+                    flat_lowering: Optional[str] = None,
+                    quant: str = "off", ef: Optional[jax.Array] = None):
     """Neighbor-only gossip mixing on the MixPlan flat layout.
 
     Without a bound multi-device mesh (or with a 1-shard ``comm_plan``)
@@ -397,12 +500,27 @@ def mix_tree_sparse(W: jax.Array, lora, mask_a, mask_b, *, comm_plan,
     (XLA overlaps it with compute), and the semantics are independent of
     the process count — the staleness penalty is bounded against Lemma
     A.10 in the conformance tier, not swept under parity.
+
+    ``quant`` ("off" | "int8" | "fp8") compresses the exchanged rows:
+    every OFF-diagonal contribution reads the per-row-quantized source
+    Q(src + ef) while the diagonal keeps the fresh full-precision rows,
+    and ``ef`` — the (m, cols) f32 error-feedback accumulator, required
+    when quant is on — is updated to the new residual. Quantized calls
+    return ``(mixed_tree, ef_new)`` instead of the tree alone. The
+    degenerate and distributed paths quantize identically (per-row), so
+    grid parity stays bitwise.
     """
     from repro.dist import sharding as _sharding
     plan = plan if plan is not None else get_mix_plan(lora)
     leaves = jax.tree_util.tree_leaves(lora)
     m = plan.m
     use_flat = sparse_use_flat(flat_lowering)
+    if quant not in MIX_QUANT_MODES:
+        raise ValueError(f"unknown mix quant mode {quant!r}; "
+                         f"known: {MIX_QUANT_MODES}")
+    if quant != "off" and ef is None:
+        raise ValueError("quantized mixing needs the (m, cols) f32 "
+                         "error-feedback accumulator (ef=...)")
 
     flat = _flat_buffer(leaves, m)
     prev_flat = None
@@ -410,16 +528,42 @@ def mix_tree_sparse(W: jax.Array, lora, mask_a, mask_b, *, comm_plan,
         prev_flat = _flat_buffer(jax.tree_util.tree_leaves(lora_prev), m)
 
     mesh = _sharding.current_mesh()
-    distributed = (mesh is not None and mesh.size > 1
-                   and comm_plan is not None
-                   and comm_plan.n_shards == mesh.size
-                   and len(mesh.axis_names) == 1)
+    ef_new = None
+    if mesh is not None and mesh.size > 1 and comm_plan is not None:
+        # a mesh/plan mismatch used to fall through to the degenerate
+        # local contraction: parity held but every byte saving silently
+        # vanished — refuse instead of degrading
+        if len(mesh.axis_names) != 1:
+            raise ValueError(
+                f"mix_tree_sparse: the sparse comm lowering needs a 1-D "
+                f"mesh over the client axis; bound mesh has axes "
+                f"{mesh.axis_names}")
+        if comm_plan.n_shards != mesh.size:
+            raise ValueError(
+                f"mix_tree_sparse: comm_plan was compiled for "
+                f"{comm_plan.n_shards} shards but the bound mesh has "
+                f"{mesh.size} devices — rebuild the CommPlan for this "
+                f"grid (the degenerate fallback would silently all-gather "
+                f"nothing and drop the sparse savings)")
+        distributed = True
+    else:
+        distributed = False
     if distributed:
-        mixed = _exchange_and_mix(W, flat, prev_flat, mask_a, mask_b,
-                                  plan, comm_plan, mesh, use_flat)
+        res = _exchange_and_mix(W, flat, prev_flat, mask_a, mask_b,
+                                plan, comm_plan, mesh, use_flat,
+                                quant=quant, ef=ef)
+        mixed, ef_new = res if quant != "off" else (res, None)
     else:
         w_rows = W.astype(flat.dtype)
-        if prev_flat is not None:
+        if quant != "off":
+            src = prev_flat if prev_flat is not None else flat
+            s = src.astype(jnp.float32) + ef
+            q, scale = quantize_rows(s, quant)
+            ef_new = s - dequantize_rows(q, scale)
+            w_off, w_diag = _split_diag(w_rows, 0)
+            mixed = _sparse_contract_quant(w_off, flat, q, scale, mask_a,
+                                           mask_b, plan, use_flat, w_diag)
+        elif prev_flat is not None:
             w_rows, w_diag = _split_diag(w_rows, 0)
             mixed = _sparse_contract(w_rows, flat, prev_flat, mask_a,
                                      mask_b, plan, use_flat, w_diag)
@@ -433,31 +577,66 @@ def mix_tree_sparse(W: jax.Array, lora, mask_a, mask_b, *, comm_plan,
         restored = chunk.reshape(m, *slot.lead, *slot.tail)
         restored = jnp.moveaxis(restored, 0, len(slot.lead))
         out.append(restored.astype(leaf.dtype))
-    return jax.tree_util.tree_unflatten(plan.treedef, out)
+    tree = jax.tree_util.tree_unflatten(plan.treedef, out)
+    if quant != "off":
+        return tree, ef_new
+    return tree
 
 
 def _exchange_and_mix(W, flat, prev_flat, mask_a, mask_b, plan: MixPlan,
-                      cp, mesh, use_flat: bool):
+                      cp, mesh, use_flat: bool, *, quant: str = "off",
+                      ef=None):
     """The distributed body: halo exchange + contraction in ONE shard_map
     region, so the per-process divergent intermediates (export rows, the
     reconstruction buffer) never exist as replicated-but-different global
-    arrays. Output rows are client-sharded, matching the round's layout."""
+    arrays. Output rows are client-sharded, matching the round's layout.
+
+    With ``quant`` on, each shard quantizes its source block (src + ef,
+    per row) BEFORE the exchange: the halo all-gather moves the 1-byte
+    payload rows plus one f32 scale per row — the wire compression — and
+    every shard dequantizes the reconstruction buffer identically. The
+    fresh local rows feed only the diagonal term. Returns
+    (mixed, ef_new_block) when quantizing, both client-sharded."""
     axis = mesh.axis_names[0]
     n, m, m_loc, k = cp.n_shards, cp.m, cp.m_loc, cp.k
     exp_local = jnp.asarray(cp.export_local)      # (n, k) int32
     exp_global = jnp.asarray(cp.export_global)    # (n*k,) int32
     overlap = prev_flat is not None
+    quantized = quant != "off"
 
     def body(w, x_blk, ma, mb, *rest):
         pid = jax.lax.axis_index(axis)
-        src_blk = rest[0] if overlap else x_blk   # rows this shard offers
-        z = jnp.zeros((m, x_blk.shape[-1]), x_blk.dtype)
+        rest = list(rest)
+        src_blk = rest.pop(0) if overlap else x_blk  # rows this shard offers
+        cols = x_blk.shape[-1]
+        w_rows = jax.lax.dynamic_slice(w, (pid * m_loc, 0), (m_loc, m))
+        if quantized:
+            ef_blk = rest.pop(0)
+            s_blk = src_blk.astype(jnp.float32) + ef_blk
+            q_blk, sc_blk = quantize_rows(s_blk, quant)
+            ef_new = s_blk - dequantize_rows(q_blk, sc_blk)
+            zq = jnp.zeros((m, cols), q_blk.dtype)
+            zs = jnp.zeros((m, 1), jnp.float32)
+            if k > 0:
+                # the compressed wire payload: 1-byte rows + f32 scales
+                halo_q = jax.lax.all_gather(
+                    jnp.take(q_blk, exp_local[pid], axis=0), axis)
+                halo_s = jax.lax.all_gather(
+                    jnp.take(sc_blk, exp_local[pid], axis=0), axis)
+                zq = zq.at[exp_global].set(halo_q.reshape(n * k, -1))
+                zs = zs.at[exp_global].set(halo_s.reshape(n * k, 1))
+            zq = jax.lax.dynamic_update_slice(zq, q_blk, (pid * m_loc, 0))
+            zs = jax.lax.dynamic_update_slice(zs, sc_blk, (pid * m_loc, 0))
+            w_off, w_diag = _split_diag(w_rows, pid * m_loc)
+            mixed = _sparse_contract_quant(w_off, x_blk, zq, zs, ma, mb,
+                                           plan, use_flat, w_diag)
+            return mixed, ef_new
+        z = jnp.zeros((m, cols), x_blk.dtype)
         if k > 0:
             exp = jnp.take(src_blk, exp_local[pid], axis=0)   # (k, cols)
             halo = jax.lax.all_gather(exp, axis)              # (n, k, cols)
             z = z.at[exp_global].set(halo.reshape(n * k, -1))
         z = jax.lax.dynamic_update_slice(z, src_blk, (pid * m_loc, 0))
-        w_rows = jax.lax.dynamic_slice(w, (pid * m_loc, 0), (m_loc, m))
         w_diag = None
         if overlap:
             w_rows, w_diag = _split_diag(w_rows, pid * m_loc)
@@ -469,6 +648,11 @@ def _exchange_and_mix(W, flat, prev_flat, mask_a, mask_b, plan: MixPlan,
     if overlap:
         in_specs.append(P(axis, None))
         args.append(prev_flat)
+    if quantized:
+        in_specs.append(P(axis, None))
+        args.append(ef)
+    out_specs = (P(axis, None), P(axis, None)) if quantized \
+        else P(axis, None)
     fn = shard_map(body, mesh=mesh, in_specs=tuple(in_specs),
-                   out_specs=P(axis, None), check_rep=False)
+                   out_specs=out_specs, check_rep=False)
     return fn(*args)

@@ -67,6 +67,18 @@ class CommPlan:
             return 0
         return itemsize * cols * self.k * (self.n_shards - 1)
 
+    def sparse_recv_bytes_quant(self, cols: int, payload_itemsize: int = 1,
+                                scale_itemsize: int = 4) -> int:
+        """Per-round bytes one process RECEIVES under the *compressed*
+        halo exchange (``mix_quant`` int8/fp8): each export row ships a
+        1-byte-per-element quantized payload plus one f32 scale instead
+        of fp32 values — (payload·cols + scale) per row versus 4·cols,
+        ≈ 0.25× at int8. 0 on a single shard."""
+        if self.n_shards <= 1:
+            return 0
+        per_row = payload_itemsize * cols + scale_itemsize
+        return per_row * self.k * (self.n_shards - 1)
+
     def signature(self) -> str:
         """Stable hex id of (support, grid) — build-cache key material."""
         h = hashlib.md5()

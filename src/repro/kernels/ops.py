@@ -15,6 +15,7 @@ import jax.numpy as jnp
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.gossip_mix import gossip_mix as _gossip
+from repro.kernels.gossip_mix import gossip_mix_quant as _gossip_quant
 from repro.kernels.lora_matmul import lora_matmul as _lora_mm
 from repro.kernels.lora_matmul import slot_lora_matmul as _slot_lora_mm
 from repro.kernels.paged_attention import paged_attn_decode as _paged_attn
@@ -119,6 +120,30 @@ def gossip_mix_seg(w: jax.Array, x: jax.Array, seg: jax.Array):
         return _gossip(w, x_p, s_p,
                        interpret=(mode == "interpret"))[:, :P]
     return _gossip(w, x, seg, interpret=(mode == "interpret"))
+
+
+def gossip_mix_quant(w_off: jax.Array, q: jax.Array, scale: jax.Array,
+                     x: jax.Array, w_diag: jax.Array, seg: jax.Array):
+    """Compressed-gossip contraction with the dequantize fused in:
+    y = seg·(w_diag·x + w_off @ (q·scale)) + (1−seg)·x. w_off: (r, m)
+    off-diagonal mixing rows; q: (m, P) int8/fp8 payload; scale: (m, 1)
+    f32 per-row scales; x: (r, P) fresh local rows; w_diag: (r, 1);
+    seg: (1, P). Zero-padded q/x/seg columns dequantize to exact zeros,
+    so padding here and slicing back is lossless."""
+    mode = _mode()
+    if mode == "ref":
+        return ref.gossip_mix_quant_ref(w_off, q, scale, x, w_diag, seg)
+    P = x.shape[1]
+    bp = 512
+    pad = (-P) % bp
+    if pad:
+        q_p = jnp.pad(q, ((0, 0), (0, pad)))
+        x_p = jnp.pad(x, ((0, 0), (0, pad)))
+        s_p = jnp.pad(seg, ((0, 0), (0, pad)))
+        return _gossip_quant(w_off, q_p, scale, x_p, w_diag, s_p,
+                             interpret=(mode == "interpret"))[:, :P]
+    return _gossip_quant(w_off, q, scale, x, w_diag, seg,
+                         interpret=(mode == "interpret"))
 
 
 def rglru_scan(a, u):

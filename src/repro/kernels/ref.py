@@ -108,6 +108,23 @@ def gossip_mix_seg_ref(w: jax.Array, x: jax.Array,
     return (s * y + (1.0 - s) * x32).astype(x.dtype)
 
 
+def gossip_mix_quant_ref(w_off: jax.Array, q: jax.Array, scale: jax.Array,
+                         x: jax.Array, w_diag: jax.Array,
+                         seg: jax.Array) -> jax.Array:
+    """Compressed-gossip contraction, dequantize fused:
+    y = seg·(w_diag·x + w_off @ (q·scale)) + (1−seg)·x.
+    w_off: (r, m) mixing rows with the diagonal zeroed; q: (m, P) int8 or
+    fp8 quantized source rows; scale: (m, 1) f32 per-row scales; x: (r, P)
+    fresh full-precision rows; w_diag: (r, 1); seg: (1, P). Mirrors
+    `gossip_mix._kernel_quant` operation for operation (same f32 casts,
+    same contraction order) so the kernel-vs-ref check is bitwise."""
+    z = q.astype(jnp.float32) * scale.astype(jnp.float32)
+    x32 = x.astype(jnp.float32)
+    y = w_diag.astype(jnp.float32) * x32 + w_off.astype(jnp.float32) @ z
+    s = seg.astype(jnp.float32)
+    return (s * y + (1.0 - s) * x32).astype(x.dtype)
+
+
 def rglru_scan_ref(a: jax.Array, u: jax.Array) -> jax.Array:
     """h_t = a_t * h_{t-1} + u_t (h_{-1}=0), along axis 1.
     a, u: (B, T, W) -> h: (B, T, W)."""

@@ -53,7 +53,8 @@ def _preset_config(args) -> dict:
     cfg.update(n_clients=args.clients, topology=args.topology, p=args.p,
                scenario=args.scenario, method=args.method, T=args.interval,
                rounds=args.rounds, local_steps=args.local_steps,
-               lr=args.lr, seed=args.seed, mix_comm=args.mix_comm)
+               lr=args.lr, seed=args.seed, mix_comm=args.mix_comm,
+               mix_quant=args.mix_quant)
     return cfg
 
 
@@ -77,12 +78,18 @@ def _comm_bytes(session) -> dict:
             n_shards=jax.device_count())
     dense_b = comm.dense_recv_bytes(cp.m, cp.n_shards, plan.cols)
     sparse_b = cp.sparse_recv_bytes(plan.cols)
+    quant_b = cp.sparse_recv_bytes_quant(plan.cols)
     mode = session.config.mix_comm
+    quant = session.config.mix_quant
+    active = dense_b if mode == "dense" else \
+        (quant_b if quant != "off" else sparse_b)
     return {
         "mix_comm": mode,
-        "comm_bytes_per_round": dense_b if mode == "dense" else sparse_b,
+        "mix_quant": quant,
+        "comm_bytes_per_round": active,
         "dense_comm_bytes_per_round": dense_b,
         "sparse_comm_bytes_per_round": sparse_b,
+        "sparse_quant_comm_bytes_per_round": quant_b,
     }
 
 
@@ -250,6 +257,10 @@ def _parser() -> argparse.ArgumentParser:
     ap.add_argument("--mix-comm", default="dense",
                     choices=("dense", "sparse", "sparse_overlap"),
                     help="gossip comm lowering (DFLConfig.mix_comm)")
+    ap.add_argument("--mix-quant", default="off",
+                    choices=("off", "int8", "fp8"),
+                    help="compressed gossip: quantize the sparse halo "
+                         "exchange (DFLConfig.mix_quant)")
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--seed", type=int, default=0)
     # run control / artifacts

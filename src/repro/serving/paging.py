@@ -38,7 +38,11 @@ class PagePool:
                              f"reserved null page), got {n_pages}")
         self.n_pages = int(n_pages)
         # LIFO free list; seeded so the first allocations are 1, 2, 3, ...
+        # A set mirrors membership: `free()`'s double-free check used to
+        # scan the list (O(n) per page), and the pool holds thousands of
+        # pages in a serving process.
         self._free: List[int] = list(range(self.n_pages - 1, 0, -1))
+        self._free_set = set(self._free)
 
     @property
     def capacity(self) -> int:
@@ -56,7 +60,11 @@ class PagePool:
     def alloc(self) -> Optional[int]:
         """One page, or None when exhausted (never raises: the caller
         decides between queueing and preemption)."""
-        return self._free.pop() if self._free else None
+        if not self._free:
+            return None
+        p = self._free.pop()
+        self._free_set.discard(p)
+        return p
 
     def alloc_many(self, k: int) -> Optional[List[int]]:
         """k pages all-or-nothing; None leaves the pool untouched."""
@@ -64,15 +72,27 @@ class PagePool:
             raise ValueError(f"alloc_many({k})")
         if len(self._free) < k:
             return None
-        return [self._free.pop() for _ in range(k)]
+        pages = self._free[-k:][::-1]
+        del self._free[len(self._free) - k:]
+        self._free_set.difference_update(pages)
+        return pages
 
     def free(self, pages: Sequence[int]) -> None:
-        for p in pages:
+        """Return a batch of pages. Atomic: the WHOLE batch is validated
+        (range, double-free against the pool, duplicates within the
+        batch) before any page is returned, so a raising call leaves the
+        pool exactly as it was — a mid-sequence raise used to strand the
+        already-appended prefix as freed while the rest stayed leaked."""
+        batch = [int(p) for p in pages]
+        seen = set()
+        for p in batch:
             if not (0 < p < self.n_pages):
                 raise ValueError(f"freeing invalid page {p}")
-            if p in self._free:
+            if p in self._free_set or p in seen:
                 raise ValueError(f"double free of page {p}")
-            self._free.append(p)
+            seen.add(p)
+        self._free.extend(batch)
+        self._free_set.update(batch)
 
 
 class BlockTables:

@@ -218,6 +218,39 @@ def test_sparse_overlap_delayed_semantics():
                for a, b in zip(jax.tree.leaves(got), fresh))
 
 
+class _FakeMesh:
+    def __init__(self, size, axis_names):
+        self.size = size
+        self.axis_names = axis_names
+
+
+def test_sparse_mesh_plan_mismatch_raises(monkeypatch):
+    """A bound mesh whose shape cannot host the CommPlan used to fall
+    through to the degenerate local contraction — parity held but the
+    sparse savings silently vanished. It must refuse instead; the
+    plan-less call (conformance probes, rate measurements) keeps the
+    degenerate path."""
+    from repro.dist import sharding
+    W = jnp.asarray(metropolis_weights(ring_graph(8)), jnp.float32)
+    lora = _tree(jax.random.PRNGKey(4))
+    cp = comm.build_comm_plan(ring_graph(8), n_shards=2)
+
+    monkeypatch.setattr(sharding, "current_mesh",
+                        lambda: _FakeMesh(4, ("x",)))
+    with pytest.raises(ValueError, match="4 devices"):
+        mixing.mix_tree_sparse(W, lora, 1.0, 1.0, comm_plan=cp)
+
+    monkeypatch.setattr(sharding, "current_mesh",
+                        lambda: _FakeMesh(4, ("x", "y")))
+    with pytest.raises(ValueError, match="1-D mesh"):
+        mixing.mix_tree_sparse(W, lora, 1.0, 1.0, comm_plan=cp)
+
+    # comm_plan=None under a multi-device mesh stays degenerate (the
+    # conformance tier's rate probes depend on it)
+    out = mixing.mix_tree_sparse(W, lora, 1.0, 1.0, comm_plan=None)
+    assert jax.tree.structure(out) == jax.tree.structure(lora)
+
+
 def test_sparse_lowering_auto_pins_flat():
     """`sparse_use_flat` auto pins the flat fused dot exactly where the
     fused gossip kernel lives (TPU meshes) and per-slot dots elsewhere —

@@ -115,6 +115,78 @@ def test_plan_layout_matches_tree(key):
     assert float(plan.a_indicator.sum()) == n_a_cols
 
 
+def test_unknown_leaf_name_raises(key):
+    """A LoRA tree with a leaf named neither 'a' nor 'b' is malformed —
+    every lowering must refuse instead of silently mixing it as a 'b'
+    leaf (the historical fallback)."""
+    bad = {"attn": {"a": jnp.ones((M, 8, 4)), "c": jnp.zeros((M, 4, 8))}}
+    W = _w(key)
+    with pytest.raises(ValueError, match="'c'"):
+        mixing.mix_tree(W, bad, 1.0, 1.0)
+    with pytest.raises(ValueError, match="'c'"):
+        mixing.mix_tree_concat(W, bad, 1.0, 1.0)
+    with pytest.raises(ValueError, match="'c'"):
+        mixing.build_mix_plan(bad)
+
+
+def test_plan_cache_lru_bounded(key, monkeypatch):
+    """The plan cache is LRU-bounded: churning tree signatures past the
+    cap evicts the oldest entries instead of growing forever, recently
+    used plans survive, and clear_mix_plans() empties it."""
+    monkeypatch.setattr(mixing, "_PLAN_CACHE_MAX", 4)
+    mixing.clear_mix_plans()
+
+    def tree_of(cols):
+        return {"a": jnp.ones((M, cols, 4)), "b": jnp.ones((M, 4, cols))}
+
+    first = tree_of(3)
+    mixing.get_mix_plan(first)
+    for c in range(4, 10):
+        mixing.get_mix_plan(tree_of(c))
+        mixing.get_mix_plan(first)          # keep `first` recently used
+        assert len(mixing._PLAN_CACHE) <= 4
+    before = mixing.plan_builds()
+    mixing.get_mix_plan(first)              # still cached: no rebuild
+    assert mixing.plan_builds() == before
+    mixing.get_mix_plan(tree_of(4))         # evicted: rebuilds
+    assert mixing.plan_builds() == before + 1
+    mixing.clear_mix_plans()
+    assert len(mixing._PLAN_CACHE) == 0
+    mixing.get_mix_plan(first)
+    assert mixing.plan_builds() == before + 2
+
+
+def test_resolve_bp_shrinks_to_divisor():
+    from repro.kernels.gossip_mix import _resolve_bp
+    assert _resolve_bp(1024, 512) == 512
+    assert _resolve_bp(256, 512) == 256       # bp capped at P
+    assert _resolve_bp(768, 512) == 256       # gcd fallback, not assert
+    assert _resolve_bp(700, 512) == 4
+    assert _resolve_bp(7, 512) == 7
+    for P, bp in ((0, 512), (512, 0), (-8, 512)):
+        with pytest.raises(ValueError):
+            _resolve_bp(P, bp)
+
+
+def test_gossip_mix_validation_raises_not_asserts(key):
+    """Shape validation survives `python -O`: ValueError, not assert, and
+    a non-multiple P runs via the divisor fallback instead of tripping."""
+    from repro.kernels.gossip_mix import gossip_mix
+    m = 4
+    W = _w(key, m)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (m, 768))
+    with pytest.raises(ValueError, match="w_eff"):
+        gossip_mix(W[:3, :3], x, interpret=True)
+    with pytest.raises(ValueError, match="seg"):
+        gossip_mix(W, x, jnp.ones((1, 99)), interpret=True)
+    # P=768 at the default bp=512: shrink-to-divisor keeps it running
+    from repro.kernels import ref
+    y = gossip_mix(W, x, interpret=True)
+    np.testing.assert_allclose(np.asarray(y),
+                               np.asarray(ref.gossip_mix_ref(W, x)),
+                               rtol=2e-5, atol=2e-5)
+
+
 def test_gossip_mix_seg_kernel_interpret(key):
     """Segmented kernel (interpret) vs the jnp oracle, non-uniform seg."""
     from repro.kernels import ref

@@ -349,3 +349,60 @@ def test_sparse_overlap_parity_across_grids(tmp_path):
         not np.array_equal(np.asarray(a), np.asarray(b))
         for a, b in zip(_jax.tree.leaves(dense.lora),
                         _jax.tree.leaves(single.lora)))
+
+
+# ---------------------------------------------------------------------------
+# -m multihost: compressed gossip (mix_quant) on real grids
+# ---------------------------------------------------------------------------
+
+@pytest.mark.multihost
+def test_quant_parity_across_grids_and_bytes(tmp_path):
+    """int8 compressed gossip is grid-invariant: per-row quantization of a
+    shard's block equals the global quantization of those rows, so 1-, 2-
+    and 4-process grids land on identical states AND identical EF
+    buffers. The reported wire payload is the compressed figure, at most
+    0.3x the fp32 sparse bytes (the acceptance ratio)."""
+    config = _sparse_cfg(mix_comm="sparse_overlap", mix_quant="int8",
+                         rounds=4)
+    out_json = os.path.join(tmp_path, "quant4.json")
+    tree2 = _spawn_ckpt(2, config, tmp_path, "quant2")
+    tree4 = _spawn_ckpt(4, config, tmp_path, "quant4",
+                        extra=["--json", out_json])
+    single = Session(config)
+    single.run()
+    _assert_trees_equal(tree2["lora"], single.lora)
+    _assert_trees_equal(tree4["lora"], single.lora)
+    assert single.ef is not None
+    np.testing.assert_array_equal(np.asarray(tree2["ef"]),
+                                  np.asarray(single.ef))
+    np.testing.assert_array_equal(np.asarray(tree4["ef"]),
+                                  np.asarray(single.ef))
+    payload = json.load(open(out_json))
+    assert payload["mix_quant"] == "int8"
+    quant_b = payload["sparse_quant_comm_bytes_per_round"]
+    assert payload["comm_bytes_per_round"] == quant_b > 0
+    assert quant_b <= 0.3 * payload["sparse_comm_bytes_per_round"]
+
+
+@pytest.mark.multihost
+def test_quant_ckpt_restores_into_two_process_grid(tmp_path):
+    """A single-process quant checkpoint restores into a 2-process grid
+    and continues to the same final state as the uninterrupted run (the
+    EF buffer re-globalizes onto the grid)."""
+    config = _sparse_cfg(mix_comm="sparse", mix_quant="int8", rounds=4)
+    half = Session(config)
+    half.run(2)
+    ckpt = os.path.join(tmp_path, "quant_half.npz")
+    half.save(ckpt)
+    full = Session(config)
+    full.run()
+    cfg_path = os.path.join(tmp_path, "quant_restore.json")
+    out = os.path.join(tmp_path, "quant_restored.npz")
+    with open(cfg_path, "w") as f:
+        json.dump(config.to_dict(), f)
+    _spawn_ok(2, ["--config", cfg_path, "--restore", ckpt,
+                  "--run-rounds", "2", "--ckpt", out, "--quiet"])
+    tree = load_pytree(out)
+    _assert_trees_equal(tree["lora"], full.lora)
+    np.testing.assert_array_equal(np.asarray(tree["ef"]),
+                                  np.asarray(full.ef))

@@ -35,6 +35,43 @@ def test_page_pool_basics():
         pool.free([0])                       # the null page is never owned
 
 
+def test_page_pool_free_is_atomic():
+    """`free` validates the WHOLE batch before mutating: a raising call
+    (bad page mid-sequence, double free, intra-batch duplicate) leaves
+    the pool exactly as it was — no stranded half-freed prefix."""
+    pool = PagePool(8)
+    got = pool.alloc_many(5)
+    pool.free(got[:2])
+    snap_list, snap_set = list(pool._free), set(pool._free_set)
+    for bad_batch in (
+        [got[2], got[3], 0],          # valid prefix, then the null page
+        [got[2], 99, got[3]],         # out-of-range mid-sequence
+        [got[2], got[0], got[3]],     # double free (already in the pool)
+        [got[2], got[2]],             # duplicate within the batch
+    ):
+        with pytest.raises(ValueError):
+            pool.free(bad_batch)
+        assert pool._free == snap_list, f"pool mutated by {bad_batch}"
+        assert pool._free_set == snap_set
+    pool.free(got[2:])                # the valid remainder still frees
+    assert pool.n_free == pool.capacity
+    assert pool._free_set == set(pool._free)
+
+
+def test_page_pool_free_set_tracks_alloc():
+    """The membership set stays consistent through alloc/alloc_many/free
+    cycles (it backs the O(1) double-free check)."""
+    pool = PagePool(10)
+    a = pool.alloc()
+    many = pool.alloc_many(3)
+    assert a not in pool._free_set
+    assert not (set(many) & pool._free_set)
+    assert pool._free_set == set(pool._free)
+    pool.free([a, *many])
+    assert pool._free_set == set(pool._free)
+    assert pool.n_free == pool.capacity
+
+
 def test_page_pool_alloc_many_all_or_nothing():
     pool = PagePool(4)
     assert pool.alloc_many(5) is None and pool.n_free == 3
