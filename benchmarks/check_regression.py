@@ -19,6 +19,9 @@ Tracked metrics per artifact (direction-aware):
                          and latency p50/p99 ms                (lower)
   BENCH_multihost.json   rounds_per_s per (mix_comm, grid size) and the
                          within-mode scale_vs_1p at N>1       (higher)
+  BENCH_figs.json        absolute per-(p, method) accuracies of the
+                         fig2/3/4 pass on the streaming data layer and
+                         fig4's per-p LoRA/TAD-best accs      (higher)
 
 Baselines missing on either side are reported but never fail the gate
 (a NEW artifact has no baseline yet; deleting one is caught by review).
@@ -106,12 +109,32 @@ def _multihost(doc) -> Metrics:
     return out
 
 
+def _figs(doc) -> Metrics:
+    out: Metrics = {}
+    for row in doc.get("fig2_rows", []):
+        p = row["p"]
+        for method, acc in row.items():
+            if method == "p":
+                continue
+            out[f"figs_fig2_p{p}_{method}_acc"] = (float(acc), "higher")
+    # the fig3 monotone-trend bit stays in the artifact for inspection but
+    # is NOT a gated metric: it can legitimately be 0/False on the reduced
+    # quick grid, and a zero can't anchor a ratio-based check
+    for p, accs in doc.get("fig4_absolute", {}).items():
+        out[f"figs_fig4_p{p}_lora_acc"] = (float(accs["lora_acc"]),
+                                           "higher")
+        out[f"figs_fig4_p{p}_tad_best_acc"] = (float(accs["tad_best_acc"]),
+                                               "higher")
+    return out
+
+
 TRACKED: Dict[str, Callable] = {
     "BENCH_mixing.json": _mixing,
     "BENCH_round_loop.json": _round_loop,
     "BENCH_scenarios.json": _scenarios,
     "BENCH_serving.json": _serving,
     "BENCH_multihost.json": _multihost,
+    "BENCH_figs.json": _figs,
 }
 
 

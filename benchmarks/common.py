@@ -37,6 +37,29 @@ CACHE_PATH = os.path.join(RESULTS, "experiments.json")
 MODEL_KW = dict(n_layers=2, d_model=64, n_heads=4, d_ff=128, vocab_size=512,
                 lora_rank=8, lora_alpha=16.0)
 N_CLIENTS = 10
+
+# Benchmarks run on the streaming data layer: a shard set per task written
+# once under results/shards/ (same generator that drew the old in-memory
+# batches — per-client dialect blocks + paper label skew, so the
+# instability regime is unchanged), consumed through FederatedStream with
+# the "domain" partitioner. `data_seed` still moves data across seeds (it
+# permutes the dialect→client deal and every epoch order).
+SHARDS_DIR = os.path.join(RESULTS, "shards")
+N_PER_CLIENT = 400
+N_VAL = 1024
+
+
+def paper_shards_path(task: str) -> str:
+    """Path to the benchmark shard set for `task`, writing it on first
+    use (seeded — every regeneration is byte-identical)."""
+    from repro.data import write_paper_task_shards
+    path = os.path.join(SHARDS_DIR, task)
+    if not os.path.exists(os.path.join(path, "meta.json")):
+        write_paper_task_shards(
+            path, task, n_clients=N_CLIENTS, n_per_client=N_PER_CLIENT,
+            n_val=N_VAL, seed=0, vocab_size=MODEL_KW["vocab_size"],
+            feature_shift=FEATURE_SHIFT)
+    return path
 DEFAULT_ROUNDS = 60          # paper: 150 (scaled for CPU budget)
 DEFAULT_LOCAL_STEPS = 10     # paper: 20
 FEATURE_SHIFT = 2
@@ -63,7 +86,8 @@ class Setting:
             n_clients=N_CLIENTS, topology=self.topology, p=self.p,
             method=self.method, T=self.T, rounds=self.rounds,
             local_steps=self.local_steps, batch_size=BATCH, lr=LR,
-            feature_shift=FEATURE_SHIFT, seed=self.seed,
+            data_source="shards", data_path=paper_shards_path(self.task),
+            partitioner="domain", seed=self.seed,
             data_seed=self.seed + 17, init_seed=INIT_SEED,
             eval_n=EVAL_N, eval_seed=9999)
 

@@ -22,17 +22,25 @@ def run(quick: bool = True):
     corner = "p\\T"
     print(f"{corner:>6} " + " ".join(f"{T:>8}" for T in t_grid))
     grid = {}
+    # absolute accuracies ride along for the regression gate: gains hover
+    # near zero in strong regimes, and a near-zero baseline can't anchor a
+    # ratio-based check
+    absolute = {}
     for p in P_GRID:
         base = mean_over_seeds(results, seeds=list(seeds), method="lora",
                                task="mnli", p=p)[0]
         row = []
+        best = float("-inf")
         for T in t_grid:
             acc = mean_over_seeds(results, seeds=list(seeds), method="tad",
                                   task="mnli", p=p, T=T)[0]
             row.append(acc - base)
             grid[(p, T)] = acc - base
+            best = max(best, acc)
+        absolute[p] = {"lora_acc": base, "tad_best_acc": best}
         print(f"{p:>6} " + " ".join(f"{g:+8.4f}" for g in row))
-    return {"grid": {f"{p}|{T}": g for (p, T), g in grid.items()}}
+    return {"grid": {f"{p}|{T}": g for (p, T), g in grid.items()},
+            "absolute": {str(p): a for p, a in absolute.items()}}
 
 
 if __name__ == "__main__":

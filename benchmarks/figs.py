@@ -1,0 +1,42 @@
+"""Combined fig2/fig3/fig4 pass on the streaming data layer, emitting the
+gated ``BENCH_figs.json`` artifact.
+
+The three figure benchmarks share one Setting sweep (the results cache
+dedupes identical configs), so this pass costs one sweep plus assembly.
+The artifact rows are ABSOLUTE per-(p, method) accuracies — the figures'
+headline quantities are gains, but gains hover near zero in strong
+regimes and a near-zero baseline can't anchor the ratio-based
+`check_regression` gate. Directions live in
+`benchmarks.check_regression._figs`.
+"""
+from __future__ import annotations
+
+import json
+
+from benchmarks import fig2_acc_vs_p, fig3_tstar, fig4_heatmap
+
+
+def run(quick: bool = True, json_path: str = ""):
+    f2 = fig2_acc_vs_p.run(quick=quick)
+    f3 = fig3_tstar.run(quick=quick)
+    f4 = fig4_heatmap.run(quick=quick)
+
+    doc = {
+        "quick": quick,
+        "fig2_rows": f2["rows"],
+        "fig2_tad_gain_vs_rolora_weak": f2["tad_gain_vs_rolora_weak"],
+        "fig2_tad_gain_vs_lora_weak": f2["tad_gain_vs_lora_weak"],
+        "fig3_rows": f3["rows"],
+        "fig3_monotone_trend": bool(f3["monotone_trend"]),
+        "fig4_grid": f4["grid"],
+        "fig4_absolute": f4["absolute"],
+    }
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(doc, f, indent=1)
+        print(f"wrote {json_path}")
+    return doc
+
+
+if __name__ == "__main__":
+    run(quick=False, json_path="BENCH_figs.json")

@@ -20,7 +20,7 @@ import sys
 import time
 import traceback
 
-BENCHES = ("fig2", "table1", "fig3", "fig4", "table3", "table5",
+BENCHES = ("fig2", "table1", "fig3", "fig4", "figs", "table3", "table5",
            "theory", "adaptive", "kernels", "roofline", "round_loop",
            "scenarios", "serving", "multihost")
 
@@ -36,6 +36,9 @@ def _headline(name: str, result) -> str:
         if name == "fig4":
             vals = list(result["grid"].values())
             return f"max_gain={max(vals):+.4f}"
+        if name == "figs":
+            return (f"tad_gain_weak={result['fig2_tad_gain_vs_rolora_weak']:+.4f},"
+                    f"tstar_monotone={result['fig3_monotone_trend']}")
         if name == "table5":
             return f"tad_ring_avg={result['tad']['avg']:.4f}"
         if name == "table3":
@@ -100,6 +103,9 @@ def main() -> None:
     ap.add_argument("--multihost-json", default="BENCH_multihost.json",
                     help="where the multihost bench records process-grid "
                          "throughput ('' disables)")
+    ap.add_argument("--figs-json", default="BENCH_figs.json",
+                    help="where the figs bench records the fig2/3/4 "
+                         "accuracy trajectory ('' disables)")
     args = ap.parse_args()
     quick = not args.paper
     selected = [b.strip() for b in args.only.split(",") if b.strip()] \
@@ -113,12 +119,12 @@ def main() -> None:
         sys.exit(2)
 
     from benchmarks import (adaptive_t, fig2_acc_vs_p, fig3_tstar,
-                            fig4_heatmap, kernel_micro, multihost,
+                            fig4_heatmap, figs, kernel_micro, multihost,
                             roofline_report, round_loop, scenarios, serving,
                             table1_regimes, table3_weak_avg, table5_ring,
                             theory_crossterm)
     mods = {"fig2": fig2_acc_vs_p, "table1": table1_regimes,
-            "fig3": fig3_tstar, "fig4": fig4_heatmap,
+            "fig3": fig3_tstar, "fig4": fig4_heatmap, "figs": figs,
             "table3": table3_weak_avg, "table5": table5_ring,
             "theory": theory_crossterm, "adaptive": adaptive_t,
             "kernels": kernel_micro, "roofline": roofline_report,
@@ -142,6 +148,8 @@ def main() -> None:
             kwargs["json_path"] = args.serving_json
         if name == "multihost" and args.multihost_json:
             kwargs["json_path"] = args.multihost_json
+        if name == "figs" and args.figs_json:
+            kwargs["json_path"] = args.figs_json
         t0 = time.time()
         try:
             result = mods[name].run(quick=quick, **kwargs)

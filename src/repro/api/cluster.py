@@ -150,6 +150,23 @@ class ClusterSession(Session):
                                            x.shape, axis=1)
         return jax.tree.map(one, self._raw_round_batch(raw))
 
+    # -- cold joins ---------------------------------------------------------
+    def _apply_client_matrix(self, R, zero_ef_rows=()):
+        """The warm-start repair mixes *across* client rows, which live on
+        different processes here: gather the sharded state to identical
+        full host arrays (exact all-gather), apply the repair in numpy on
+        every process (same inputs -> bitwise same result, no broadcast
+        needed), then re-shard onto the grid."""
+        self.lora = multihost.to_host(self.lora, self.mesh)
+        self.opt_state = AdamWState(
+            step=multihost.to_host(self.opt_state.step, self.mesh),
+            mu=multihost.to_host(self.opt_state.mu, self.mesh),
+            nu=multihost.to_host(self.opt_state.nu, self.mesh))
+        if self.ef is not None:
+            self.ef = multihost.to_host(self.ef, self.mesh)
+        super()._apply_client_matrix(R, zero_ef_rows)
+        self._globalize_state()
+
     # -- the round / evaluation under the bound mesh ------------------------
     def _one_round(self, **kw):
         with self._bound():

@@ -27,6 +27,7 @@ from typing import Mapping, Optional
 
 from repro.core.alternating import METHODS
 from repro.core.topology import GRAPH_FAMILIES
+from repro.data.partition import PARTITIONERS
 from repro.scenarios.library import SCENARIOS
 
 CLASSIFIER_TASKS = ("sst2", "qqp", "qnli", "mnli")
@@ -36,8 +37,9 @@ FLAT_LOWERINGS = ("auto", "flat", "per_segment")
 MIX_GATHER_MODES = ("auto", "on", "off")
 MIX_COMM_MODES = ("dense", "sparse", "sparse_overlap")
 MIX_QUANT_MODES = ("off", "int8", "fp8")
+DATA_SOURCES = ("synthetic", "shards")
 
-_KEY_VERSION = 6   # bump when semantics of any field change
+_KEY_VERSION = 7   # bump when semantics of any field change
 
 
 @dataclass(frozen=True)
@@ -96,9 +98,18 @@ class DFLConfig:
     feature_shift: int = 0       # per-client feature dialects (classifier)
     eval_n: int = 384
     eval_seed: int = 9999
+    data_source: str = "synthetic"  # "synthetic" (per-round draws) |
+                                 # "shards" (tokenized shard set at
+                                 # data_path through FederatedStream)
+    data_path: str = ""          # shard-set directory (data_source=shards)
+    partitioner: str = "paper"   # non-IID partitioner (repro.data
+                                 # PARTITIONERS; shards source only)
+    partitioner_kw: tuple = ()   # partitioner params (dirichlet alpha, ...)
+    data_prefetch: int = 0       # stream prefetch depth (0 = synchronous)
 
     def __post_init__(self):
-        for kw_field in ("model_kw", "topology_kw", "scenario_kw"):
+        for kw_field in ("model_kw", "topology_kw", "scenario_kw",
+                         "partitioner_kw"):
             v = getattr(self, kw_field)
             if isinstance(v, Mapping):
                 object.__setattr__(self, kw_field, tuple(sorted(v.items())))
@@ -155,6 +166,25 @@ class DFLConfig:
               f"mix_quant {self.mix_quant!r} compresses the sparse halo "
               f"exchange; it requires mix_comm='sparse' or "
               f"'sparse_overlap'")
+        check(self.data_source in DATA_SOURCES,
+              f"unknown data_source {self.data_source!r}; "
+              f"known: {DATA_SOURCES}")
+        if self.data_source == "shards":
+            check(bool(self.data_path),
+                  "data_source 'shards' requires data_path (a shard-set "
+                  "directory; see repro.data.shards.write_shards)")
+            check(self.task != "lm",
+                  "data_source 'shards' serves classifier tasks (the LM "
+                  "stream stays synthetic)")
+        else:
+            check(self.partitioner == "paper" and not self.partitioner_kw,
+                  "partitioner/partitioner_kw apply to data_source="
+                  "'shards' (the synthetic source hard-codes the paper "
+                  "rows)")
+        check(self.partitioner in PARTITIONERS,
+              f"unknown partitioner {self.partitioner!r}; "
+              f"known: {sorted(PARTITIONERS)}")
+        check(self.data_prefetch >= 0, "data_prefetch must be >= 0")
         check(self.n_clients >= 2, "n_clients must be >= 2")
         check(0.0 < self.p <= 1.0, "p must be in (0, 1]")
         check(self.rounds > 0, "rounds must be positive")
@@ -168,7 +198,8 @@ class DFLConfig:
     # -- serialization ------------------------------------------------------
     def to_dict(self) -> dict:
         d = dataclasses.asdict(self)
-        for kw_field in ("model_kw", "topology_kw", "scenario_kw"):
+        for kw_field in ("model_kw", "topology_kw", "scenario_kw",
+                         "partitioner_kw"):
             d[kw_field] = dict(getattr(self, kw_field))
         return d
 

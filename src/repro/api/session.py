@@ -43,6 +43,9 @@ from repro.core import mixing
 from repro.core.lora import build_lora_tree
 from repro.core.topology import Topology, make_topology, \
     optimal_switching_interval
+from repro.data.partition import make_partition
+from repro.data.shards import ShardSet
+from repro.data.stream import FederatedStream
 from repro.data.synthetic import (eval_batch, federated_batches,
                                   label_skew_partitions, lm_token_stream,
                                   make_task)
@@ -176,6 +179,7 @@ def _build_key(cfg: DFLConfig, comm_plan: Optional[CommPlan] = None):
             cfg.mix_impl, cfg.mix_flat_lowering,
             _resolve_mix_gather(cfg.mix_gather), cfg.donate, cfg.init_seed,
             cfg.mix_comm, cfg.mix_quant,
+            cfg.data_source, cfg.data_path,
             comm_plan.signature() if comm_plan is not None else None)
 
 
@@ -212,9 +216,20 @@ def _build(cfg: DFLConfig, model_cfg, loss_fn) -> _Built:
                                              init_classifier)
         mc = model_cfg if model_cfg is not None \
             else encoder_config(**dict(cfg.model_kw))
-        # task tokens must live inside the model's embedding table
-        task = make_task(cfg.task, feature_shift=cfg.feature_shift,
-                         vocab_size=mc.vocab_size)
+        if cfg.data_source == "shards":
+            # task identity comes from the shard manifest; its token ids
+            # must live inside the model's embedding table
+            task = ShardSet(cfg.data_path)
+            if task.vocab_size > mc.vocab_size:
+                raise ValueError(
+                    f"shard set {task.name!r} has vocab_size="
+                    f"{task.vocab_size} > model vocab_size="
+                    f"{mc.vocab_size}; regenerate the shards or widen "
+                    f"model_kw['vocab_size']")
+        else:
+            # task tokens must live inside the model's embedding table
+            task = make_task(cfg.task, feature_shift=cfg.feature_shift,
+                             vocab_size=mc.vocab_size)
         base = init_classifier(base_key, mc, n_classes=task.n_classes)
         if loss_fn is None:
             def loss_fn(bp, lo, micro, _cfg=mc):
@@ -379,6 +394,9 @@ class Session:
         if self.config.mix_quant != "off":
             plan = mixing.get_mix_plan(self.lora)
             self.ef = jnp.zeros((plan.m, plan.cols), jnp.float32)
+        old = getattr(self, "_batches", None)
+        if old is not None and hasattr(old, "close"):
+            old.close()                 # join a prefetching stream's worker
         self._batches = self._raw_batch_iter()
         self.t = 0
         self.last_metrics = None
@@ -386,7 +404,23 @@ class Session:
     # -- data ---------------------------------------------------------------
     # raw (numpy) draws and device conversion are split so checkpoint
     # replay can advance the data RNG without materializing device arrays
+    # (the shard stream skips even that: its batches are pure functions of
+    # the round index, so replay is an O(1) seek)
     def _raw_batch_iter(self) -> Iterator:
+        cfg = self.config
+        if cfg.data_source == "shards":
+            shards: ShardSet = self.task
+            parts = make_partition(cfg.partitioner, shards.labels("train"),
+                                   cfg.n_clients, seed=cfg.data_seed,
+                                   domains=shards.domains("train"),
+                                   **dict(cfg.partitioner_kw))
+            return FederatedStream(shards, parts, batch=cfg.batch_size,
+                                   local_steps=cfg.local_steps,
+                                   seed=cfg.data_seed,
+                                   prefetch=cfg.data_prefetch)
+        return self._synthetic_batch_iter()
+
+    def _synthetic_batch_iter(self) -> Iterator:
         cfg = self.config
         if cfg.task == "lm":
             m, ls, b, S = (cfg.n_clients, cfg.local_steps, cfg.batch_size,
@@ -433,9 +467,57 @@ class Session:
         self.last_event = ev
         return ev
 
+    # -- cold joins (adapter-initialization half of the identity repair) ----
+    def _apply_client_matrix(self, R: np.ndarray,
+                             zero_ef_rows: tuple = ()) -> None:
+        """Apply a host-side (m, m) row-mixing matrix to every client-axis
+        state tree (LoRA factors + Adam moments). Runs in numpy on the
+        full state so every process grid computes the identical result
+        bit-for-bit; `zero_ef_rows` clears those clients' error-feedback
+        accumulators (a joiner's residual describes pre-join state).
+        ClusterSession overrides this to gather/re-shard around it."""
+        R64 = np.asarray(R, np.float64)
+
+        def one(x):
+            a = np.asarray(x)
+            mixed = np.einsum("ij,...jdr->...idr", R64, a)
+            return jnp.asarray(mixed.astype(a.dtype))
+
+        self.lora = jax.tree.map(one, self.lora)
+        self.opt_state = AdamWState(
+            step=self.opt_state.step,
+            mu=jax.tree.map(one, self.opt_state.mu),
+            nu=jax.tree.map(one, self.opt_state.nu))
+        if self.ef is not None and zero_ef_rows:
+            ef = np.array(self.ef)
+            ef[list(zero_ef_rows)] = 0.0
+            self.ef = jnp.asarray(ef)
+
+    def _warm_start_clients(self, joiners: tuple) -> None:
+        """Initialize joining clients' adapters from the average of their
+        already-warm graph neighbors (uniform over the support adjacency,
+        excluding co-joiners). A joiner with no warm neighbor keeps its
+        cold state — the identity row is the only sound fallback."""
+        m = self.config.n_clients
+        sup = np.asarray(schedule_support(self.topo_schedule), bool)
+        js = {int(j) for j in joiners}
+        R = np.eye(m)
+        for j in js:
+            nbrs = [k for k in range(m)
+                    if k != j and k not in js and sup[j, k]]
+            if nbrs:
+                R[j, :] = 0.0
+                R[j, nbrs] = 1.0 / len(nbrs)
+        self._apply_client_matrix(R, zero_ef_rows=tuple(sorted(js)))
+
     def _one_round(self, *, is_last: bool, notify: bool,
                    want_event: bool = False) -> Optional[RoundEvent]:
         t = self.t
+        join_fn = getattr(self.topo_schedule, "join_events", None)
+        if join_fn is not None:
+            joiners = tuple(join_fn(t))
+            if joiners:
+                self._warm_start_clients(joiners)
         batch = self._to_device(next(self._batches))
         W_np = self.topo_schedule.next_w(t)
         masks = self.schedule.next_masks(
@@ -498,8 +580,12 @@ class Session:
                              "LM runs score held-out loss/perplexity at the "
                              "call site (see examples/dfl_finetune.py)")
         cfg = self.config
-        test = eval_batch(self.task, n if n is not None else cfg.eval_n,
-                          seed=seed if seed is not None else cfg.eval_seed)
+        n_eval = n if n is not None else cfg.eval_n
+        eval_seed = seed if seed is not None else cfg.eval_seed
+        if isinstance(self.task, ShardSet):
+            test = self.task.eval_batch(n_eval, seed=eval_seed)
+        else:
+            test = eval_batch(self.task, n_eval, seed=eval_seed)
         # placement hook: on a cluster the eval batch must be replicated
         # onto the global mesh next to the replicated base params
         toks = self._device_scalar_inputs(test["tokens"])
@@ -545,8 +631,14 @@ class Session:
         if self._user_schedule is None:
             self.schedule = self._default_schedule()
         saved_round = int(np.asarray(tree["meta"]["round"]))
+        if hasattr(self._batches, "seek"):
+            # shard streams are pure functions of the round index: replay
+            # is an O(1) reposition, bit-for-bit equal to re-iteration
+            self._batches.seek(saved_round)
+        else:
+            for _ in range(saved_round):
+                next(self._batches)          # data RNG replay (numpy only)
         for t in range(saved_round):
-            next(self._batches)              # data RNG replay (numpy only)
             W = self.topo_schedule.next_w(t)  # topology RNG replay
             self.schedule.next_masks(
                 t, {"W": W, "round": t, "session": self})

@@ -125,6 +125,38 @@ def watts_strogatz_graph(m: int, k: int = 4, beta: float = 0.2,
     return a                              # last draw (k>=2 is near-surely ok)
 
 
+def hierarchical_graph(m: int, n_silos: int = 0, intra: str = "complete",
+                       inter: str = "ring", seed: int = 0) -> np.ndarray:
+    """Two-tier cross-silo topology: m clients split into `n_silos`
+    near-equal contiguous silos, each silo internally wired by the
+    `intra` family (dense by default), and silo *gateways* (the first
+    node of each silo) wired by the `inter` family over silos (sparse by
+    default) — the hierarchical intra-silo-dense / inter-silo-sparse
+    setting of cross-silo FL, composed from the existing graph families.
+
+    `n_silos=0` picks ~sqrt(m) silos. Both tier families accept any
+    non-hierarchical `GRAPH_FAMILIES` member."""
+    if n_silos <= 0:
+        n_silos = max(2, int(np.sqrt(m)))
+    if not 2 <= n_silos <= m:
+        raise ValueError(f"n_silos={n_silos} must be in [2, m={m}]")
+    if "hierarchical" in (intra, inter):
+        raise ValueError("hierarchical tiers cannot nest")
+    groups = np.array_split(np.arange(m), n_silos)
+    a = np.zeros((m, m))
+    for g in groups:
+        if len(g) > 1:
+            a[np.ix_(g, g)] = underlying_graph(intra, len(g), seed)
+    gateways = [int(g[0]) for g in groups]
+    top = underlying_graph(inter, n_silos, seed + 1)
+    for s in range(n_silos):
+        for s2 in range(s + 1, n_silos):
+            if top[s, s2]:
+                i, j = gateways[s], gateways[s2]
+                a[i, j] = a[j, i] = 1.0
+    return a
+
+
 def laplacian(adj: np.ndarray) -> np.ndarray:
     return np.diag(adj.sum(1)) - adj
 
@@ -247,12 +279,14 @@ class Topology:
 
 
 GRAPH_FAMILIES = ("complete", "ring", "erdos_renyi", "exponential",
-                  "torus", "small_world")
+                  "torus", "small_world", "hierarchical")
 
 
 def underlying_graph(kind: str, m: int, seed: int = 0, *, er_q: float = 0.5,
                      torus_rows: int = 0, torus_cols: int = 0,
-                     ws_k: int = 4, ws_beta: float = 0.2) -> np.ndarray:
+                     ws_k: int = 4, ws_beta: float = 0.2,
+                     hier_silos: int = 0, hier_intra: str = "complete",
+                     hier_inter: str = "ring") -> np.ndarray:
     """Adjacency of a named graph family (the scenario library's graph
     constructor; graph randomness derives from `seed`, not a shared rng)."""
     if kind == "complete":
@@ -268,6 +302,9 @@ def underlying_graph(kind: str, m: int, seed: int = 0, *, er_q: float = 0.5,
     if kind == "small_world":
         return watts_strogatz_graph(m, ws_k, ws_beta,
                                     np.random.default_rng(seed + 777))
+    if kind == "hierarchical":
+        return hierarchical_graph(m, hier_silos, hier_intra, hier_inter,
+                                  seed)
     raise ValueError(f"unknown graph family {kind!r}; "
                      f"known: {GRAPH_FAMILIES}")
 

@@ -1,6 +1,19 @@
+from repro.data.partition import (PARTITIONERS, client_label_distributions,
+                                  dirichlet_partition, domain_partition,
+                                  iid_partition, label_skew, make_partition,
+                                  paper_partition, quantity_skew_partition)
+from repro.data.shards import (ShardSet, write_paper_task_shards,
+                               write_shards)
+from repro.data.stream import FederatedStream
 from repro.data.synthetic import (SyntheticTask, federated_batches,
                                   label_skew_partitions, lm_token_stream,
                                   make_task)
 
 __all__ = ["SyntheticTask", "federated_batches", "label_skew_partitions",
-           "lm_token_stream", "make_task"]
+           "lm_token_stream", "make_task",
+           "ShardSet", "write_shards", "write_paper_task_shards",
+           "FederatedStream",
+           "PARTITIONERS", "make_partition", "iid_partition",
+           "dirichlet_partition", "quantity_skew_partition",
+           "domain_partition", "paper_partition",
+           "client_label_distributions", "label_skew"]

@@ -1,0 +1,210 @@
+"""Pluggable non-IID partitioners: shard rows -> per-client index sets.
+
+Paper §VI-A evaluates TAD-LoRA under heterogeneous client data; this
+module is where that heterogeneity is manufactured. A *partitioner* maps
+a split's per-row metadata (labels, domains) to `n_clients` disjoint
+index arrays, one per client, which `repro.data.stream.FederatedStream`
+then iterates per-client epochs over.
+
+Every partitioner obeys three invariants the property tier enforces
+(`tests/test_property.py`):
+
+  * deterministic — same (inputs, seed) -> identical partition,
+  * total — the client index sets are disjoint and cover a subset of
+    rows with every client receiving >= 1 sample,
+  * parameterized skew — the knob that controls heterogeneity moves the
+    measured skew monotonically (Dirichlet ``alpha`` down => label
+    distributions drift apart).
+
+Registry::
+
+    "paper"      hard-coded §VI-A label-skew rows (via
+                 repro.data.synthetic.label_skew_partitions), rows
+                 realized by sampling without replacement
+    "dirichlet"  label-skew Dirichlet(alpha) per client (FedML idiom)
+    "quantity"   quantity skew: IID labels, Dirichlet(alpha) sizes
+    "domain"     per-client domain shift: shard `domains` ids dealt
+                 round-robin to clients
+    "iid"        uniform shuffle split (control)
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Sequence, Tuple
+
+import numpy as np
+
+Partition = Tuple[np.ndarray, ...]
+
+
+def _as_labels(labels) -> np.ndarray:
+    lab = np.asarray(labels, np.int64).ravel()
+    if lab.size == 0:
+        raise ValueError("cannot partition an empty split")
+    return lab
+
+
+def _ensure_nonempty(parts, rng: np.random.Generator) -> Partition:
+    """Give every empty client one row stolen from the largest client —
+    the 'every client trains' invariant the round loop assumes (an empty
+    client would make its fixed-shape batch undefined)."""
+    parts = [np.asarray(p, np.int64) for p in parts]
+    for i, p in enumerate(parts):
+        if len(p) == 0:
+            donor = int(np.argmax([len(q) for q in parts]))
+            if len(parts[donor]) <= 1:
+                raise ValueError("fewer rows than clients — cannot give "
+                                 "every client a sample")
+            k = int(rng.integers(0, len(parts[donor])))
+            parts[i] = parts[donor][k:k + 1]
+            parts[donor] = np.delete(parts[donor], k)
+    return tuple(parts)
+
+
+def iid_partition(labels, n_clients: int, *, seed: int = 0) -> Partition:
+    """Uniform shuffle split — the homogeneous control."""
+    lab = _as_labels(labels)
+    rng = np.random.default_rng((int(seed), 0xD1D))
+    perm = rng.permutation(len(lab))
+    return _ensure_nonempty(np.array_split(perm, n_clients), rng)
+
+
+def dirichlet_partition(labels, n_clients: int, *, alpha: float = 0.5,
+                        seed: int = 0) -> Partition:
+    """Label-skew Dirichlet: for each class, split its rows across
+    clients by a Dirichlet(alpha) draw. Small alpha -> each class
+    concentrates on few clients (strong skew); large alpha -> IID."""
+    if alpha <= 0:
+        raise ValueError("alpha must be positive")
+    lab = _as_labels(labels)
+    rng = np.random.default_rng((int(seed), 0xD12))
+    out = [[] for _ in range(n_clients)]
+    for c in np.unique(lab):
+        idx = rng.permutation(np.flatnonzero(lab == c))
+        props = rng.dirichlet(np.full(n_clients, float(alpha)))
+        cuts = (np.cumsum(props)[:-1] * len(idx)).astype(np.int64)
+        for i, chunk in enumerate(np.split(idx, cuts)):
+            out[i].append(chunk)
+    parts = [np.sort(np.concatenate(p)) if p else np.empty(0, np.int64)
+             for p in out]
+    return _ensure_nonempty(parts, rng)
+
+
+def quantity_skew_partition(labels, n_clients: int, *, alpha: float = 0.5,
+                            seed: int = 0) -> Partition:
+    """Quantity skew: labels stay IID per client but client dataset
+    *sizes* follow Dirichlet(alpha) — some clients are data-rich, some
+    data-poor (every client keeps >= 1 row)."""
+    if alpha <= 0:
+        raise ValueError("alpha must be positive")
+    lab = _as_labels(labels)
+    rng = np.random.default_rng((int(seed), 0xD13))
+    perm = rng.permutation(len(lab))
+    props = rng.dirichlet(np.full(n_clients, float(alpha)))
+    cuts = (np.cumsum(props)[:-1] * len(lab)).astype(np.int64)
+    return _ensure_nonempty(np.split(perm, cuts), rng)
+
+
+def domain_partition(labels, n_clients: int, *, domains=None,
+                     seed: int = 0) -> Partition:
+    """Per-client domain shift: each distinct domain id is dealt to one
+    client (round-robin in sorted-id order after a seeded shuffle of the
+    deal). With exactly `n_clients` domains — the layout
+    `write_paper_task_shards` produces — client i recovers domain π(i)
+    whole, i.e. a full feature-dialect per client."""
+    lab = _as_labels(labels)
+    if domains is None:
+        raise ValueError("domain partitioner needs per-row `domains` "
+                         "(shard sets store them; see ShardSet.domains)")
+    dom = np.asarray(domains, np.int64).ravel()
+    if dom.shape != lab.shape:
+        raise ValueError("domains must align with labels")
+    ids = np.unique(dom[dom >= 0])
+    if len(ids) == 0:
+        raise ValueError("split has no domain ids (all -1) — use a "
+                         "label-based partitioner instead")
+    rng = np.random.default_rng((int(seed), 0xD14))
+    order = rng.permutation(len(ids))
+    out = [[] for _ in range(n_clients)]
+    for k, j in enumerate(order):
+        out[k % n_clients].append(np.flatnonzero(dom == ids[j]))
+    parts = [np.sort(np.concatenate(p)) if p else np.empty(0, np.int64)
+             for p in out]
+    return _ensure_nonempty(parts, rng)
+
+
+def paper_partition(labels, n_clients: int, *, seed: int = 0) -> Partition:
+    """The §VI-A hard-coded label-skew rows, realized on real rows: each
+    client draws (without replacement) a class mix matching its
+    `label_skew_partitions` row as closely as the split allows."""
+    from repro.data.synthetic import label_skew_partitions
+
+    lab = _as_labels(labels)
+    n_classes = int(lab.max()) + 1
+    rows = label_skew_partitions(n_classes, n_clients)
+    rng = np.random.default_rng((int(seed), 0xD15))
+    pools = {c: list(rng.permutation(np.flatnonzero(lab == c)))
+             for c in range(n_classes)}
+    per_client = len(lab) // n_clients
+    out = []
+    for i in range(n_clients):
+        want = np.floor(rows[i] * per_client).astype(np.int64)
+        take = []
+        for c in range(n_classes):
+            got = [pools[c].pop() for _ in range(min(want[c],
+                                                     len(pools[c])))]
+            take.extend(got)
+        # top up from whatever classes still have rows, largest-need first
+        while len(take) < per_client:
+            c = max(pools, key=lambda c: len(pools[c]))
+            if not pools[c]:
+                break
+            take.append(pools[c].pop())
+        out.append(np.sort(np.asarray(take, np.int64)))
+    return _ensure_nonempty(out, rng)
+
+
+PARTITIONERS: Dict[str, Callable[..., Partition]] = {
+    "iid": iid_partition,
+    "dirichlet": dirichlet_partition,
+    "quantity": quantity_skew_partition,
+    "domain": domain_partition,
+    "paper": paper_partition,
+}
+
+
+def make_partition(name: str, labels, n_clients: int, *, seed: int = 0,
+                   domains=None, **kw) -> Partition:
+    """Dispatch by registry name. `domains` is forwarded only to the
+    domain partitioner; unknown kwargs raise (same contract as
+    `repro.scenarios.schedule_from_config`)."""
+    if name not in PARTITIONERS:
+        raise ValueError(f"unknown partitioner {name!r}; known: "
+                         f"{sorted(PARTITIONERS)}")
+    if name == "domain":
+        kw = dict(kw, domains=domains)
+    try:
+        return PARTITIONERS[name](labels, n_clients, seed=seed, **kw)
+    except TypeError as e:
+        raise ValueError(f"bad partitioner_kw for {name!r}: {e}") from e
+
+
+def client_label_distributions(parts: Sequence[np.ndarray], labels,
+                               n_classes: int) -> np.ndarray:
+    """(n_clients, n_classes) empirical label distribution per client —
+    the quantity the skew-monotonicity property is measured on."""
+    lab = _as_labels(labels)
+    out = np.zeros((len(parts), n_classes))
+    for i, p in enumerate(parts):
+        out[i] = np.bincount(lab[p], minlength=n_classes)[:n_classes]
+        out[i] /= max(1, len(p))
+    return out
+
+
+def label_skew(parts: Sequence[np.ndarray], labels,
+               n_classes: int) -> float:
+    """Mean total-variation distance of client label distributions from
+    the global mix — 0 for IID, -> 1 as clients specialize."""
+    dist = client_label_distributions(parts, labels, n_classes)
+    lab = _as_labels(labels)
+    global_mix = np.bincount(lab, minlength=n_classes)[:n_classes] / len(lab)
+    return float(np.mean(np.abs(dist - global_mix).sum(1) / 2.0))

@@ -1,0 +1,195 @@
+"""FederatedStream — fixed-shape, optionally prefetching batch iterator.
+
+The round loop consumes one dict per round::
+
+    {"tokens": (local_steps, m, batch, S) int32,
+     "labels": (local_steps, m, batch)    int32}
+
+exactly the shape `repro.data.synthetic.federated_batches` yields, so
+`Session` swaps sources without recompiling — shard boundaries, epoch
+boundaries and client dataset sizes never reach the compiled round.
+
+Determinism contract (the whole point of this module):
+`round_batch(t)` is a **pure function of the round index** — client i's
+sample sequence is the concatenation of per-epoch permutations seeded
+``(seed, client, epoch)``, and round t reads positions
+``[t*local_steps*batch, (t+1)*...)`` of it. Consequences the test tier
+pins down:
+
+  * checkpoint/restore replays bit-for-bit: restoring to round t is
+    `seek(t)`, O(1), no RNG state to serialize (`tests/test_data.py`),
+  * process grids are invariant: every `ClusterSession` process draws
+    the identical full batch and ships its own client block, so 1p/2p/4p
+    grids see the same global batch order (`tests/test_multihost.py`),
+  * the prefetch thread cannot skew anything — it only computes
+    `round_batch(t+1)` early, it never owns state.
+
+Prefetch is opt-in (``prefetch=1``); a closed stream joins its worker.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Dict, Optional, Sequence
+
+import numpy as np
+
+from repro.data.shards import ShardSet
+
+
+class FederatedStream:
+    """Iterator of round batches over (ShardSet, partition).
+
+    Also usable as a plain iterator (`next(stream)`) — that path walks
+    an internal round counter that `seek` repositions in O(1).
+    """
+
+    def __init__(self, shards: ShardSet, parts: Sequence[np.ndarray], *,
+                 batch: int, local_steps: int, seed: int = 0,
+                 split: str = "train", prefetch: int = 0):
+        self.shards = shards
+        self.parts = tuple(np.asarray(p, np.int64) for p in parts)
+        if any(len(p) == 0 for p in self.parts):
+            raise ValueError("every client needs >= 1 row (see "
+                             "repro.data.partition._ensure_nonempty)")
+        self.n_clients = len(self.parts)
+        self.batch = int(batch)
+        self.local_steps = int(local_steps)
+        self.seed = int(seed)
+        self.split = split
+        self._t = 0
+        self._per_round = self.batch * self.local_steps
+        self._worker: Optional[_Prefetcher] = None
+        if prefetch:
+            self._worker = _Prefetcher(self, depth=int(prefetch))
+
+    # -- pure index math ----------------------------------------------------
+    def _epoch_perm(self, client: int, epoch: int) -> np.ndarray:
+        rng = np.random.default_rng((self.seed, int(client), int(epoch)))
+        return rng.permutation(len(self.parts[client]))
+
+    def client_rows(self, client: int, t: int) -> np.ndarray:
+        """Global row indices client `client` trains on in round t —
+        positions [t*ls*b, (t+1)*ls*b) of its infinite epoch-permutation
+        stream, mapped through its partition."""
+        n = len(self.parts[client])
+        lo = t * self._per_round
+        hi = lo + self._per_round
+        local = np.empty(self._per_round, np.int64)
+        out = 0
+        for epoch in range(lo // n, (hi - 1) // n + 1):
+            a = max(lo, epoch * n) - epoch * n
+            b = min(hi, (epoch + 1) * n) - epoch * n
+            local[out:out + (b - a)] = self._epoch_perm(client, epoch)[a:b]
+            out += b - a
+        return self.parts[client][local]
+
+    def round_batch(self, t: int) -> Dict[str, np.ndarray]:
+        """The full round-t batch, identical on every caller."""
+        if t < 0:
+            raise ValueError("round index must be >= 0")
+        idx = np.stack([self.client_rows(i, t)
+                        for i in range(self.n_clients)])   # (m, ls*b)
+        flat = self.shards.read(self.split, idx.ravel())
+        S = self.shards.seq_len
+        m, ls, b = self.n_clients, self.local_steps, self.batch
+        toks = flat["tokens"].reshape(m, ls, b, S).transpose(1, 0, 2, 3)
+        labs = flat["labels"].reshape(m, ls, b).transpose(1, 0, 2)
+        return {"tokens": np.ascontiguousarray(toks),
+                "labels": np.ascontiguousarray(labs)}
+
+    # -- iterator / lifecycle ----------------------------------------------
+    def __iter__(self):
+        return self
+
+    def __next__(self) -> Dict[str, np.ndarray]:
+        t = self._t
+        self._t = t + 1
+        if self._worker is not None:
+            return self._worker.get(t)
+        return self.round_batch(t)
+
+    def seek(self, t: int) -> None:
+        """Reposition to round t in O(1) — restore never replays data."""
+        if t < 0:
+            raise ValueError("round index must be >= 0")
+        self._t = int(t)
+        if self._worker is not None:
+            self._worker.flush(self._t)
+
+    @property
+    def round(self) -> int:
+        return self._t
+
+    def close(self) -> None:
+        """Join the prefetch worker (no-op without one). Idempotent."""
+        if self._worker is not None:
+            self._worker.close()
+            self._worker = None
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+
+class _Prefetcher:
+    """Bounded-queue worker computing `round_batch(t)` ahead of the
+    consumer. Because batches are pure functions of t, the worker holds
+    no stream state — `flush` after a seek just restarts it at the new
+    position."""
+
+    def __init__(self, stream: FederatedStream, depth: int = 1):
+        self._stream = stream
+        self._depth = max(1, depth)
+        self._q: queue.Queue = queue.Queue(maxsize=self._depth)
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+        self._start(stream.round)
+
+    def _start(self, t0: int) -> None:
+        self._stop.clear()
+        self._thread = threading.Thread(
+            target=self._run, args=(t0,), daemon=True,
+            name="repro-data-prefetch")
+        self._thread.start()
+
+    def _run(self, t: int) -> None:
+        while not self._stop.is_set():
+            item = (t, self._stream.round_batch(t))
+            while not self._stop.is_set():
+                try:
+                    self._q.put(item, timeout=0.05)
+                    break
+                except queue.Full:
+                    continue
+            t += 1
+
+    def get(self, t: int):
+        while True:
+            got_t, batch = self._q.get()
+            if got_t == t:
+                return batch
+            if got_t > t:           # consumer seeked backwards under us
+                self.flush(t)
+
+    def flush(self, t0: int) -> None:
+        """Discard queued batches and restart the worker at round t0."""
+        self._halt()
+        self._q = queue.Queue(maxsize=self._depth)
+        self._start(t0)
+
+    def _halt(self) -> None:
+        self._stop.set()
+        if self._thread is not None:
+            while True:             # drain so a blocked put() can exit
+                try:
+                    self._q.get_nowait()
+                except queue.Empty:
+                    break
+            self._thread.join(timeout=5.0)
+            self._thread = None
+
+    def close(self) -> None:
+        self._halt()

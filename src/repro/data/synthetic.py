@@ -25,17 +25,30 @@ PAPER_PARTITION_MNLI = ([[0.9, 0.05, 0.05]] * 4 + [[0.05, 0.9, 0.05]] * 3 +
                         [[0.05, 0.05, 0.9]] * 3)
 
 
-def label_skew_partitions(n_classes: int, n_clients: int = 10) -> np.ndarray:
-    """The paper's client label distributions (rows: clients)."""
+def label_skew_partitions(n_classes: int, n_clients: int = 10, *,
+                          seed: int = 0, alpha: float = 0.15) -> np.ndarray:
+    """The paper's client label distributions (rows: clients).
+
+    The (2, 10) and (3, 10) shapes are the hard-coded §VI-A tables.
+    Every other shape falls back to a *seeded* Dirichlet(alpha) draw per
+    client, rotated so client i's heaviest expected class is i mod
+    n_classes (the same 1/n_classes-of-clients-per-class structure as
+    the paper rows). Same (seed, alpha) -> identical matrix; the
+    regression test in tests/test_data.py pins the default draw.
+    """
     if n_classes == 2 and n_clients == 10:
         return np.array(PAPER_PARTITION_BINARY)
     if n_classes == 3 and n_clients == 10:
         return np.array(PAPER_PARTITION_MNLI)
-    # generalized: 1/3 of clients skewed to each class (Dirichlet-ish)
-    rng = np.random.default_rng(0)
-    probs = np.full((n_clients, n_classes), 0.1 / max(n_classes - 1, 1))
+    if alpha <= 0:
+        raise ValueError("alpha must be positive")
+    rng = np.random.default_rng((int(seed), n_classes, n_clients))
+    conc = np.full(n_classes, float(alpha))
+    probs = np.empty((n_clients, n_classes))
     for i in range(n_clients):
-        probs[i, i % n_classes] = 0.9
+        row = np.sort(rng.dirichlet(conc))[::-1]      # heaviest first
+        order = np.roll(np.arange(n_classes), -(i % n_classes))
+        probs[i, order] = row
     return probs / probs.sum(1, keepdims=True)
 
 

@@ -1,7 +1,9 @@
 """`repro.scenarios` — the communication-scenario library.
 
-Topology schedules (static / edge activation / churn / stragglers / phase
-switching over any `repro.core.topology` graph family) behind one
+Topology schedules (static / edge activation / churn / stragglers —
+including persistent per-client speed ratios — / mid-run cold joins /
+phase switching over any `repro.core.topology` graph family, incl. the
+hierarchical two-tier cross-silo composition) behind one
 `TopologySchedule` protocol, the named `SCENARIO_MATRIX` the conformance
 test tier and `benchmarks/scenarios.py` sweep, and the `DFLConfig` →
 schedule factory `Session` uses. W_t is always plain (m, m) data, so every
@@ -11,14 +13,16 @@ from repro.scenarios.library import (SCENARIO_MATRIX, SCENARIO_NAMES,
                                      SCENARIOS, Scenario, estimate_rho_sq,
                                      get_scenario, schedule_from_config)
 from repro.scenarios.schedule import (BroadcastSchedule, ClientChurn,
-                                      EdgeActivation, GossipSchedule,
+                                      ColdJoin, EdgeActivation,
+                                      GossipSchedule, PersistentStraggler,
                                       PhaseSwitch, StaticGraph,
                                       StragglerDropout, TopologySchedule,
                                       schedule_support)
 
 __all__ = [
     "TopologySchedule", "GossipSchedule", "StaticGraph", "EdgeActivation",
-    "ClientChurn", "StragglerDropout", "PhaseSwitch", "BroadcastSchedule",
+    "ClientChurn", "StragglerDropout", "PersistentStraggler", "ColdJoin",
+    "PhaseSwitch", "BroadcastSchedule",
     "Scenario", "SCENARIO_MATRIX", "SCENARIO_NAMES", "SCENARIOS",
     "schedule_from_config", "estimate_rho_sq", "get_scenario",
     "schedule_support",

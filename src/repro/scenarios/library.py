@@ -26,13 +26,13 @@ import numpy as np
 
 from repro.core.topology import (Topology, make_topology,
                                  rho_sq_from_samples, underlying_graph)
-from repro.scenarios.schedule import (ClientChurn, EdgeActivation,
-                                      GossipSchedule, PhaseSwitch,
-                                      StaticGraph, StragglerDropout,
-                                      TopologySchedule)
+from repro.scenarios.schedule import (ClientChurn, ColdJoin, EdgeActivation,
+                                      GossipSchedule, PersistentStraggler,
+                                      PhaseSwitch, StaticGraph,
+                                      StragglerDropout, TopologySchedule)
 
 SCENARIOS = ("gossip", "static", "edge_activation", "churn", "straggler",
-             "phase_switch")
+             "phase_switch", "persistent_straggler", "cold_join")
 
 # phase_switch scenario_kw defaults (second = the degraded phase)
 _PHASE_DEFAULTS = dict(switch_round=10, weak_graph="ring", weak_p=0.1)
@@ -64,6 +64,10 @@ def schedule_from_config(cfg, topology: Optional[Topology] = None,
             return ClientChurn(adj, cfg.p, cfg.seed, **skw)
         if cfg.scenario == "straggler":
             return StragglerDropout(adj, cfg.p, cfg.seed, **skw)
+        if cfg.scenario == "persistent_straggler":
+            return PersistentStraggler(adj, cfg.p, cfg.seed, **skw)
+        if cfg.scenario == "cold_join":
+            return ColdJoin(adj, cfg.p, cfg.seed, **skw)
         if cfg.scenario == "phase_switch":
             kw = {**_PHASE_DEFAULTS, **skw}
             weak_adj = underlying_graph(kw["weak_graph"], cfg.n_clients,
@@ -145,6 +149,20 @@ class Scenario:
         elif self.scenario == "straggler":
             up = 1.0 - skw.get("drop", 0.2)
             p_eff *= up * up
+        elif self.scenario == "persistent_straggler":
+            # minimum per-edge activation: edges touching a slow client
+            # fire only on wake rounds (all slow clients wake together,
+            # so no edge is worse than p/period) — the mean availability
+            # overstates the gap because the worst-mixed direction
+            # concentrates on the slow clients
+            frac = skw.get("frac", 0.3)
+            period = skw.get("period", 4)
+            if round(frac * m) > 0:
+                p_eff /= period
+        elif self.scenario == "cold_join":
+            # stationary regime (the phase the rho estimate's burn_in
+            # skips) = everyone joined = plain edge activation at p
+            pass
         return [("", adj, p_eff, lambda: self.build(m, seed))]
 
 
@@ -166,6 +184,16 @@ SCENARIO_MATRIX = (
              scenario_kw=(("drop", 0.25),)),
     Scenario("phase-strong-weak", "complete", "phase_switch", p=0.5,
              scenario_kw=(("switch_round", 8), ("weak_p", 0.15))),
+    Scenario("complete-persistent-straggler", "complete",
+             "persistent_straggler", p=0.4,
+             scenario_kw=(("frac", 0.3), ("period", 3)),
+             decay_target=0.1),
+    Scenario("hier-cold-join", "hierarchical", "cold_join", p=0.6,
+             topology_kw=(("hier_silos", 3),),
+             scenario_kw=(("joiners", 2), ("join_round", 6)),
+             burn_in=6, decay_target=0.2),
+    Scenario("hier-edge", "hierarchical", "edge_activation", p=0.5,
+             topology_kw=(("hier_silos", 3), ("hier_inter", "ring"))),
 )
 
 SCENARIO_NAMES = tuple(s.name for s in SCENARIO_MATRIX)

@@ -19,6 +19,15 @@ Implementations:
                          which preserves double stochasticity exactly.
   * `StragglerDropout` — i.i.d. per-round node dropout, same identity-row
                          repair.
+  * `PersistentStraggler` — a seeded persistent subset of clients is
+                         permanently slow and only communicates every
+                         `period`-th round (per-client speed ratios,
+                         unlike the memoryless dropout).
+  * `ColdJoin`         — clients absent until `join_round`, then joining
+                         with cold adapters; exposes `join_events(t)` so
+                         the Session warm-starts joiners from neighbor
+                         state (the adapter-initialization half of the
+                         identity-row repair).
   * `PhaseSwitch`      — strong→weak (or any) schedule change at a fixed
                          round boundary.
   * `BroadcastSchedule`— process-grid agreement wrapper: rank 0 draws,
@@ -226,6 +235,89 @@ class StragglerDropout(EdgeActivation):
         return metropolis_weights(a)
 
 
+class PersistentStraggler(EdgeActivation):
+    """Stragglers with *persistent* per-client speed ratios: a seeded
+    `frac` of clients is permanently slow and communicates only every
+    `period`-th round (all slow clients surface together at
+    t % period == 0 — a barrier-style straggler, so slow–slow edges
+    still fire and the Lemma A.10 bound survives with the *minimum*
+    per-edge activation p_eff = p/period: heterogeneous edge rates make
+    the worst-mixed direction concentrate on the slow clients, so the
+    mean availability overstates the gap — the per-edge minimum is the
+    sound scalar, and `p_eff()` returns it). Off-rounds give slow
+    clients the identity row/col repair; they keep training locally,
+    exactly the paper's offline-node semantics."""
+
+    def __init__(self, adj: np.ndarray, p: float = 0.5, seed: int = 0,
+                 frac: float = 0.3, period: int = 4):
+        super().__init__(adj, p, seed)
+        if not 0.0 <= frac <= 1.0:
+            raise ValueError("frac must be in [0, 1]")
+        if period < 1:
+            raise ValueError("period must be >= 1")
+        self.frac = float(frac)
+        self.period = int(period)
+        n_slow = int(round(self.frac * self.m))
+        pick = np.random.default_rng((seed, 0x510))
+        self.slow = np.zeros(self.m, bool)
+        self.slow[pick.permutation(self.m)[:n_slow]] = True
+
+    def p_eff(self) -> float:
+        """Effective per-edge activation for the Lemma A.10 bound: the
+        minimum over edges. Edges touching a slow client fire only on
+        wake rounds -> p/period (slow clients wake together, so
+        slow–slow edges are no worse); with no slow clients, p."""
+        return self.p / self.period if self.slow.any() else self.p
+
+    def next_w(self, t: int) -> np.ndarray:
+        up = np.ones(self.m, bool)
+        if t % self.period != 0:
+            up[self.slow] = False
+        a = self._fired_adj()
+        a *= up[:, None] * up[None, :]
+        return metropolis_weights(a)
+
+
+class ColdJoin(EdgeActivation):
+    """Clients joining mid-run with cold adapters: `joiners` are offline
+    (identity row/col, frozen out of gossip) until `join_round`, then
+    participate like everyone else. The schedule side is the same
+    identity-row repair churn uses; the *adapter-initialization half*
+    lives in `join_events(t)` — `Session._one_round` polls it and
+    warm-starts each joiner's LoRA/optimizer rows from its graph
+    neighbors' average (consensus distance then contracts per Lemma
+    A.10 instead of paying a cold-adapter transient; the conformance
+    tier checks the contraction within the C_STALE budget)."""
+
+    def __init__(self, adj: np.ndarray, p: float = 0.5, seed: int = 0,
+                 joiners=1, join_round: int = 10):
+        super().__init__(adj, p, seed)
+        if join_round < 0:
+            raise ValueError("join_round must be >= 0")
+        if isinstance(joiners, (int, np.integer)):
+            if not 0 <= joiners < self.m:
+                raise ValueError("joiner count must be in [0, m)")
+            joiners = tuple(range(self.m - int(joiners), self.m))
+        self.joiners = tuple(int(j) for j in joiners)
+        if any(not 0 <= j < self.m for j in self.joiners):
+            raise ValueError("joiner index out of range")
+        if len(self.joiners) >= self.m:
+            raise ValueError("at least one client must start warm")
+        self.join_round = int(join_round)
+
+    def join_events(self, t: int) -> tuple:
+        """Clients joining (cold->warm) at round t; the Session hook."""
+        return self.joiners if t == self.join_round else ()
+
+    def next_w(self, t: int) -> np.ndarray:
+        up = np.ones(self.m, bool)
+        if t < self.join_round:
+            up[list(self.joiners)] = False
+        a = self._fired_adj()
+        a *= up[:, None] * up[None, :]
+        return metropolis_weights(a)
+
+
 class BroadcastSchedule:
     """Process-grid agreement wrapper: rank 0's W_t is the only draw that
     counts. `ClusterSession` wraps schedules that do not declare
@@ -260,6 +352,12 @@ class BroadcastSchedule:
 
     def support_adjacency(self) -> np.ndarray:
         return schedule_support(self.inner)
+
+    def join_events(self, t: int) -> tuple:
+        """Proxy the inner schedule's cold-join hook (empty otherwise) —
+        wrapping must not hide joins from the Session's warm start."""
+        fn = getattr(self.inner, "join_events", None)
+        return tuple(fn(t)) if fn is not None else ()
 
     def next_w(self, t: int) -> np.ndarray:
         from repro.dist import multihost

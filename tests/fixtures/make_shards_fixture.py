@@ -1,0 +1,31 @@
+"""Regenerate the committed tiny shard set under tests/fixtures/shards/.
+
+    PYTHONPATH=src python tests/fixtures/make_shards_fixture.py
+
+The fixture is the tier-1 smoke data for the streaming data layer: an
+MNLI-style 10-domain shard set small enough to commit (a few KB of npz),
+vocab 256 so it fits the test encoder's embedding table, with a shard
+size chosen so the train split spans MULTIPLE shards — the reader's
+cross-shard gather is exercised by every test that touches it. Tests pin
+the manifest signature; regenerating with unchanged parameters is
+byte-stable (all randomness is seeded).
+"""
+import os
+
+from repro.data import write_paper_task_shards
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+OUT = os.path.join(HERE, "shards", "mnli_tiny")
+
+SPEC = dict(n_clients=10, n_per_client=48, n_val=96, shard_size=64,
+            seed=0, vocab_size=256, feature_shift=2)
+
+
+def main() -> None:
+    ss = write_paper_task_shards(OUT, "mnli", **SPEC)
+    print(f"wrote {OUT}: train={ss.split_size('train')} "
+          f"val={ss.split_size('val')} sig={ss.signature()}")
+
+
+if __name__ == "__main__":
+    main()

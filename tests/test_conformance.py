@@ -122,6 +122,104 @@ def test_consensus_decay_under_pure_gossip(scenario):
 
 
 # ---------------------------------------------------------------------------
+# heterogeneous clients: persistent stragglers + cold joiners (§VI-A)
+# ---------------------------------------------------------------------------
+
+def test_persistent_straggler_peff_is_minimum_edge_rate():
+    """The p_eff fed to Lemma A.10 for persistent stragglers must be the
+    MINIMUM per-edge activation rate p/period, not mean availability: the
+    worst-mixed direction concentrates on the slow clients, whose edges
+    fire only on wake rounds. Checks (a) the slow set is persistent and
+    wakes synchronized, (b) empirical per-edge firing rates: slow-touching
+    edges sit at p/period, fast-fast edges at p, (c) the measured
+    contraction gap still clears c_mix·p_eff·λ2 at that conservative
+    p_eff."""
+    from repro.scenarios.schedule import PersistentStraggler
+    p, period = 0.4, 3
+    adj = underlying_graph("complete", M, seed=0)
+
+    def fresh():
+        return PersistentStraggler(adj, p, seed=0, frac=0.3, period=period)
+
+    sched = fresh()
+    slow = np.flatnonzero(sched.slow)
+    assert 0 < len(slow) < M
+    assert np.array_equal(np.flatnonzero(fresh().slow), slow)  # persistent
+    p_eff = sched.p_eff()
+    assert p_eff == pytest.approx(p / period)
+
+    rounds = 4000
+    fired = np.zeros((M, M))
+    for t in range(rounds):
+        W = sched.next_w(t)
+        off = np.abs(W - np.diag(np.diag(W))) > 1e-12
+        if t % period != 0:        # (a) off-wake rounds: slow edges silent
+            assert not off[slow].any()
+        fired += off
+    rate = fired / rounds
+    is_slow = sched.slow
+    for i, j in np.argwhere(np.triu(adj, 1)):
+        expect = p / period if (is_slow[i] or is_slow[j]) else p
+        assert rate[i, j] == pytest.approx(expect, abs=0.04), (
+            f"edge ({i},{j}) fired at {rate[i, j]:.3f}, expected "
+            f"{expect:.3f}")
+        assert rate[i, j] >= p_eff - 0.04     # p_eff IS the minimum
+
+    rho_sq = estimate_rho_sq(fresh(), rounds=200)
+    gap = 1.0 - float(np.sqrt(rho_sq))
+    bound = lemma_a10_gap_bound(adj, p_eff, c_mix=C_MIX)
+    assert gap >= bound, (
+        f"persistent straggler: gap {gap:.4f} below Lemma A.10 bound "
+        f"{bound:.4f} at p_eff = p/period")
+
+
+def test_cold_join_consensus_within_staleness_budget():
+    """Cold joiners hold identity rows (frozen state) until join_round;
+    afterwards the consensus contraction must retain at least C_STALE of
+    the Lemma A.10 gap at the stationary p_eff = p — joining late dilates
+    the mixing time by a bounded factor instead of destroying the
+    contraction. Also pins the join mechanics the Session warm-start hook
+    relies on: join_events fires exactly once, and joiner state is
+    bitwise frozen pre-join."""
+    from repro.scenarios.schedule import ColdJoin
+    p, join_round = 0.6, 6
+    adj = underlying_graph("hierarchical", M, seed=0, hier_silos=3)
+
+    def fresh():
+        return ColdJoin(adj, p, seed=0, joiners=2, join_round=join_round)
+
+    sched = fresh()
+    joiners = list(sched.joiners)
+    assert sched.join_events(join_round) == sched.joiners
+    assert all(sched.join_events(t) == ()
+               for t in range(20) if t != join_round)
+
+    rng = np.random.default_rng(5)
+    x = rng.normal(size=(M, 16))
+    x0 = x.copy()
+    eye = np.eye(M)
+    for t in range(join_round):
+        W = sched.next_w(t)
+        for j in joiners:
+            np.testing.assert_array_equal(W[j], eye[j])
+            np.testing.assert_array_equal(W[:, j], eye[:, j])
+        x = W @ x
+    np.testing.assert_array_equal(x[joiners], x0[joiners])  # frozen
+
+    # post-join: measure the per-round contraction over a 40-round window
+    d_join = float(np.sum((x - x.mean(0)) ** 2))
+    post = 40
+    for t in range(join_round, join_round + post):
+        x = sched.next_w(t) @ x
+    d_end = float(np.sum((x - x.mean(0)) ** 2))
+    rho_post = (d_end / d_join) ** (0.5 / post)
+    bound = lemma_a10_gap_bound(adj, p, c_mix=C_MIX)
+    assert 1.0 - rho_post >= C_STALE * bound, (
+        f"cold join: post-join gap {1.0 - rho_post:.4f} below "
+        f"{C_STALE} * Lemma A.10 bound {bound:.4f}")
+
+
+# ---------------------------------------------------------------------------
 # cross-term vs T (Prop. A.5 / main theorem) under weak connectivity
 # ---------------------------------------------------------------------------
 

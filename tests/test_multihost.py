@@ -352,6 +352,92 @@ def test_sparse_overlap_parity_across_grids(tmp_path):
 
 
 # ---------------------------------------------------------------------------
+# shards data source on process grids (streaming data layer)
+# ---------------------------------------------------------------------------
+
+FIXTURE = os.path.join(os.path.dirname(__file__), "fixtures", "shards",
+                       "mnli_tiny")
+
+
+def _shards_cfg(**kw):
+    base = dict(model="encoder", task="mnli", model_kw=ENC_KW, n_clients=8,
+                rounds=4, local_steps=2, batch_size=4, p=0.6, T=2,
+                lr=1e-3, seed=0, data_source="shards", data_path=FIXTURE,
+                partitioner="domain")
+    base.update(kw)
+    return DFLConfig(**base)
+
+
+def test_cluster_degenerate_on_shards():
+    """Tier-1: a 1-process ClusterSession on the shards data source is an
+    exact Session (the stream is drawn globally; _to_device slices the
+    local client block, which on one process is everything)."""
+    cs = ClusterSession(_shards_cfg(rounds=3))
+    cs.run()
+    ss = Session(_shards_cfg(rounds=3))
+    ss.run()
+    _assert_trees_equal(cs.lora, ss.lora)
+
+
+@pytest.mark.multihost
+def test_shards_batch_order_invariant_across_grids(tmp_path):
+    """1-, 2- and 4-process grids see the identical global batch order:
+    `FederatedStream.round_batch(t)` is a pure function of the round
+    index drawn identically on every process, so sharding the client
+    axis cannot perturb a single sample — final params are bitwise equal
+    across process counts."""
+    config = _shards_cfg()
+    tree2 = _spawn_ckpt(2, config, tmp_path, "shards2")
+    tree4 = _spawn_ckpt(4, config, tmp_path, "shards4")
+    single = Session(config)
+    single.run()
+    _assert_trees_equal(tree2["lora"], single.lora)
+    _assert_trees_equal(tree4["lora"], single.lora)
+    _assert_trees_equal(tree2["opt"]["mu"], single.opt_state.mu)
+    _assert_trees_equal(tree4["opt"]["nu"], single.opt_state.nu)
+
+
+@pytest.mark.multihost
+def test_shards_midepoch_ckpt_across_process_counts(tmp_path):
+    """A 2-process grid checkpoints MID-EPOCH (round 3 of a 6-round client
+    epoch on the fixture); a single-process restore seeks the stream to
+    the saved round and continues bit-for-bit into the same final state
+    as an uninterrupted run."""
+    config = _shards_cfg(rounds=6)
+    cfg_path = os.path.join(tmp_path, "cfg.json")
+    ckpt = os.path.join(tmp_path, "shards_half.npz")
+    with open(cfg_path, "w") as f:
+        json.dump(config.to_dict(), f)
+    _spawn_ok(2, ["--config", cfg_path, "--run-rounds", "3",
+                  "--ckpt", ckpt, "--quiet"])
+
+    resumed = Session(config)
+    assert resumed.restore(ckpt) == 3
+    resumed.run(3)
+    full = Session(config)
+    full.run()
+    _assert_trees_equal(resumed.lora, full.lora)
+    _assert_trees_equal(resumed.opt_state.mu, full.opt_state.mu)
+
+
+@pytest.mark.multihost
+def test_cold_join_warm_start_parity_on_grid(tmp_path):
+    """Cold-join adapter warm start on a grid: the joiner repair is a
+    host-side client-axis matrix applied to the GLOBAL state (gathered,
+    repaired, re-sharded), so a 2-process hierarchical cold-join run must
+    land bitwise on the single-process result."""
+    config = _shards_cfg(rounds=5, scenario="cold_join",
+                         topology="hierarchical",
+                         topology_kw=dict(hier_silos=3),
+                         scenario_kw=dict(joiners=2, join_round=2))
+    tree2 = _spawn_ckpt(2, config, tmp_path, "coldjoin2")
+    single = Session(config)
+    single.run()
+    _assert_trees_equal(tree2["lora"], single.lora)
+    _assert_trees_equal(tree2["opt"]["mu"], single.opt_state.mu)
+
+
+# ---------------------------------------------------------------------------
 # -m multihost: compressed gossip (mix_quant) on real grids
 # ---------------------------------------------------------------------------
 
