@@ -22,6 +22,8 @@ Tracked metrics per artifact (direction-aware):
   BENCH_figs.json        absolute per-(p, method) accuracies of the
                          fig2/3/4 pass on the streaming data layer and
                          fig4's per-p LoRA/TAD-best accs      (higher)
+  BENCH_control.json     FMMC spectral gap per graph family   (higher)
+                         + closed-loop final loss per regime  (lower)
 
 Baselines missing on either side are reported but never fail the gate
 (a NEW artifact has no baseline yet; deleting one is caught by review).
@@ -128,6 +130,19 @@ def _figs(doc) -> Metrics:
     return out
 
 
+def _control(doc) -> Metrics:
+    out: Metrics = {}
+    for row in doc.get("families", []):
+        out[f"control_fmmc_gap_{row['family']}"] = (float(row["fmmc_gap"]),
+                                                    "higher")
+    for row in doc.get("closed_loop", []):
+        out[f"control_{row['regime']}_closed_loss"] = (
+            float(row["closed_final_loss"]), "lower")
+        out[f"control_{row['regime']}_oracle_loss"] = (
+            float(row["oracle_final_loss"]), "lower")
+    return out
+
+
 TRACKED: Dict[str, Callable] = {
     "BENCH_mixing.json": _mixing,
     "BENCH_round_loop.json": _round_loop,
@@ -135,6 +150,7 @@ TRACKED: Dict[str, Callable] = {
     "BENCH_serving.json": _serving,
     "BENCH_multihost.json": _multihost,
     "BENCH_figs.json": _figs,
+    "BENCH_control.json": _control,
 }
 
 

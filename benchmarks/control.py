@@ -1,0 +1,141 @@
+"""Closed-loop control plane vs fixed-T / Metropolis baselines.
+
+Two measurements feeding ``BENCH_control.json``:
+
+1. *Weight policy*: FMMC (`fastest_mixing_weights`) vs Metropolis spectral
+   gap 1−ρ on every `repro.core.topology.GRAPH_FAMILIES` member — pure
+   numpy, deterministic, the structural "FMMC never loses" guarantee as a
+   tracked number per family.
+
+2. *Closed loop*: a `ControlConfig(t_policy="adaptive",
+   weight_policy="fmmc", rho_estimator="gram")` session against the
+   fixed-T grid on weak/moderate edge-activation topologies (small
+   encoder/SST-2, one jitted round shared across every arm). Reports the
+   oracle (hindsight-best fixed T) final loss, the closed-loop final loss,
+   rounds-to-target for both, and the ``within_5pct`` acceptance bit: the
+   closed loop must land within 5% of the oracle's final loss with no
+   oracle access.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import numpy as np
+
+from repro.api import DFLConfig, HistoryRecorder, Session
+from repro.core.topology import (GRAPH_FAMILIES, fastest_mixing_weights,
+                                 metropolis_weights, underlying_graph)
+
+ENC_KW = dict(n_layers=1, d_model=32, n_heads=2, d_ff=64, vocab_size=256)
+M = 8
+
+
+def fmmc_vs_metropolis(m: int = M) -> list:
+    rows = []
+    for family in GRAPH_FAMILIES:
+        adj = underlying_graph(family, m, seed=0)
+        J = np.ones((m, m)) / m
+        gap_m = 1.0 - float(np.linalg.norm(metropolis_weights(adj) - J, 2))
+        gap_f = 1.0 - float(np.linalg.norm(fastest_mixing_weights(adj) - J,
+                                           2))
+        rows.append({"family": family, "m": m,
+                     "metropolis_gap": round(gap_m, 6),
+                     "fmmc_gap": round(gap_f, 6),
+                     "gain": round(gap_f - gap_m, 6)})
+    return rows
+
+
+def _config(topology: str, p: float, rounds: int, *, T: int = 2,
+            control=None) -> DFLConfig:
+    return DFLConfig(model="encoder", task="sst2", model_kw=ENC_KW,
+                     n_clients=M, topology=topology, p=p,
+                     scenario="edge_activation", method="tad", T=T,
+                     rounds=rounds, local_steps=2, batch_size=8,
+                     lr=2e-3, seed=0, control=control)
+
+
+def _run(cfg: DFLConfig):
+    hist = HistoryRecorder(every=1)
+    session = Session(cfg, callbacks=[hist])
+    session.run()
+    losses = [row["loss"] for row in hist.history]
+    return float(losses[-1]), losses, session
+
+
+def _rounds_to(losses, target: float):
+    for t, loss in enumerate(losses):
+        if loss <= target:
+            return t + 1
+    return None
+
+
+def closed_loop_vs_fixed(rounds: int, t_grid) -> list:
+    rows = []
+    for label, topology, p in (("weak", "ring", 0.2),
+                               ("moderate", "complete", 0.5)):
+        fixed = {}
+        for T in t_grid:
+            fixed[T], _, _ = _run(_config(topology, p, rounds, T=T))
+        oracle_T = min(fixed, key=fixed.get)
+        oracle_loss, oracle_curve, _ = _run(
+            _config(topology, p, rounds, T=oracle_T))
+        closed_loss, closed_curve, session = _run(
+            _config(topology, p, rounds,
+                    control=dict(t_policy="adaptive", weight_policy="fmmc",
+                                 rho_estimator="gram", c=0.5,
+                                 t_max=max(t_grid))))
+        target = 1.02 * oracle_loss
+        rows.append({
+            "regime": label, "topology": topology, "p": p,
+            "rounds": rounds,
+            "fixed": {str(T): round(v, 6) for T, v in fixed.items()},
+            "oracle_T": oracle_T,
+            "oracle_final_loss": round(oracle_loss, 6),
+            "closed_final_loss": round(closed_loss, 6),
+            "closed_T_final": session.control.T,
+            "closed_rho_hat": round(session.control.rho_hat, 4),
+            "oracle_rounds_to_target": _rounds_to(oracle_curve, target),
+            "closed_rounds_to_target": _rounds_to(closed_curve, target),
+            "within_5pct": bool(closed_loss <= 1.05 * oracle_loss),
+        })
+        print(f"  {label:>9} ({topology}, p={p}): oracle T={oracle_T} "
+              f"loss={oracle_loss:.4f} | closed loss={closed_loss:.4f} "
+              f"(T->{session.control.T}, rho={session.control.rho_hat:.3f})"
+              f" within_5pct={rows[-1]['within_5pct']}")
+    return rows
+
+
+def run(quick: bool = True, json_path: str | None = None) -> dict:
+    rounds = 16 if quick else 40
+    t_grid = (1, 2, 4) if quick else (1, 2, 3, 5, 8)
+
+    print("=== FMMC vs Metropolis spectral gap per graph family ===")
+    families = fmmc_vs_metropolis()
+    for row in families:
+        print(f"  {row['family']:>13}: metropolis {row['metropolis_gap']:.4f}"
+              f" -> fmmc {row['fmmc_gap']:.4f} (+{row['gain']:.4f})")
+
+    print("=== closed loop (fmmc + adaptive T) vs fixed-T oracle ===")
+    closed = closed_loop_vs_fixed(rounds, t_grid)
+
+    payload = {"families": families, "closed_loop": closed,
+               "all_within_5pct": all(r["within_5pct"] for r in closed)}
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(payload, f, indent=1)
+        print(f"wrote {json_path}")
+    return payload
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--paper", action="store_true",
+                    help="full grid (slower); default is the quick CI pass")
+    ap.add_argument("--json", default="")
+    args = ap.parse_args()
+    run(quick=not args.paper, json_path=args.json or None)
+
+
+if __name__ == "__main__":
+    main()

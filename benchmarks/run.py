@@ -22,7 +22,7 @@ import traceback
 
 BENCHES = ("fig2", "table1", "fig3", "fig4", "figs", "table3", "table5",
            "theory", "adaptive", "kernels", "roofline", "round_loop",
-           "scenarios", "serving", "multihost")
+           "scenarios", "serving", "multihost", "control")
 
 
 def _headline(name: str, result) -> str:
@@ -75,6 +75,11 @@ def _headline(name: str, result) -> str:
             return (f"rps_1p={rps.get(1, 0):.1f},rps_2p={rps.get(2, 0):.1f},"
                     f"rps_4p={rps.get(4, 0):.1f},"
                     f"parity={result['loss_parity_across_grids']}")
+        if name == "control":
+            worst = min(r["fmmc_gap"] - r["metropolis_gap"]
+                        for r in result["families"])
+            return (f"fmmc_gain_min={worst:+.4f},"
+                    f"within_5pct={result['all_within_5pct']}")
     except Exception:
         pass
     return "done"
@@ -106,6 +111,9 @@ def main() -> None:
     ap.add_argument("--figs-json", default="BENCH_figs.json",
                     help="where the figs bench records the fig2/3/4 "
                          "accuracy trajectory ('' disables)")
+    ap.add_argument("--control-json", default="BENCH_control.json",
+                    help="where the control bench records the closed-loop "
+                         "and FMMC-gap trajectory ('' disables)")
     args = ap.parse_args()
     quick = not args.paper
     selected = [b.strip() for b in args.only.split(",") if b.strip()] \
@@ -118,7 +126,7 @@ def main() -> None:
               f"known: {','.join(BENCHES)}", file=sys.stderr)
         sys.exit(2)
 
-    from benchmarks import (adaptive_t, fig2_acc_vs_p, fig3_tstar,
+    from benchmarks import (adaptive_t, control, fig2_acc_vs_p, fig3_tstar,
                             fig4_heatmap, figs, kernel_micro, multihost,
                             roofline_report, round_loop, scenarios, serving,
                             table1_regimes, table3_weak_avg, table5_ring,
@@ -129,7 +137,7 @@ def main() -> None:
             "theory": theory_crossterm, "adaptive": adaptive_t,
             "kernels": kernel_micro, "roofline": roofline_report,
             "round_loop": round_loop, "scenarios": scenarios,
-            "serving": serving, "multihost": multihost}
+            "serving": serving, "multihost": multihost, "control": control}
 
     csv_rows = []
     json_rows = []
@@ -150,6 +158,8 @@ def main() -> None:
             kwargs["json_path"] = args.multihost_json
         if name == "figs" and args.figs_json:
             kwargs["json_path"] = args.figs_json
+        if name == "control" and args.control_json:
+            kwargs["json_path"] = args.control_json
         t0 = time.time()
         try:
             result = mods[name].run(quick=quick, **kwargs)

@@ -8,8 +8,11 @@ Session with its client axis sharded across a process grid
 (`repro.dist.multihost`) — launched by `repro.launch.cluster`. The serving side mirrors it:
 an `AdapterPool` stacks the per-client adapters a run produces and a
 `ServingSession` serves them from one compiled decode step (`ServeSync`
-bridges the two for serve-while-training). `repro.core` stays the
-low-level primitive layer underneath.
+bridges the two for serve-while-training). The closed-loop control plane
+(`ControlConfig`/`ControlPlane`/`RoundStats`, from `repro.control`)
+re-tunes T and mixing weights between rounds from the same observation
+payload callbacks consume. `repro.core` stays the low-level primitive
+layer underneath.
 """
 from repro.api.callbacks import (Callback, CheckpointCallback, ConsoleLogger,
                                  HistoryRecorder)
@@ -18,6 +21,7 @@ from repro.api.config import DFLConfig
 from repro.api.rounds import build_round
 from repro.api.schedule import AdaptiveSchedule, MaskSchedule, StaticSchedule
 from repro.api.serving import AdapterPool, ServeSync, ServingSession
+from repro.control import ControlConfig, ControlPlane, RoundStats
 from repro.serving import QuotaExceeded, TenantQuota
 from repro.api.session import RoundEvent, RunResult, Session
 from repro.scenarios import TopologySchedule, schedule_from_config
@@ -25,6 +29,7 @@ from repro.scenarios import TopologySchedule, schedule_from_config
 __all__ = [
     "DFLConfig", "Session", "ClusterSession", "RunResult", "RoundEvent",
     "MaskSchedule", "StaticSchedule", "AdaptiveSchedule",
+    "ControlConfig", "ControlPlane", "RoundStats",
     "TopologySchedule", "schedule_from_config",
     "Callback", "ConsoleLogger", "HistoryRecorder", "CheckpointCallback",
     "AdapterPool", "ServingSession", "ServeSync",

@@ -25,7 +25,14 @@ the grid (`repro.dist.multihost`):
     blocking host collective that dominated small-payload rounds),
   * checkpoints gather to host and are written by rank 0 only, in the
     exact format `Session.save` writes — a 2-process run's checkpoint
-    restores into a single-process `Session` (and vice versa).
+    restores into a single-process `Session` (and vice versa),
+  * the control plane (`config.control`, repro.control) runs as
+    replicated host math: every process folds the same realized W_t into
+    the same estimator state and installs the same deterministic weight
+    policy, so T retunes and FMMC weights agree across the grid without
+    extra collectives. The frozen-contraction estimator is the exception
+    (it reads full client state per round) and is rejected on grids >1
+    process — use "spectral" or "gram" there.
 
 Multi-controller contract: every process constructs the same
 `ClusterSession` and makes the same calls in the same order. Callbacks run
@@ -65,6 +72,16 @@ class ClusterSession(Session):
 
     def __init__(self, config, **kw):
         multihost.initialize()          # env-protocol no-op if not gridded
+        cc = config.control
+        if cc.active and cc.rho_estimator == "frozen" \
+                and jax.process_count() > 1:
+            # the consensus probe reads the full client state every round —
+            # a per-round blocking gather on a grid; the W-only routes are
+            # replicated host math and grid-invariant by construction
+            raise ValueError(
+                "control.rho_estimator 'frozen' needs host-local client "
+                "state each round; on a process grid use 'spectral' or "
+                "'gram' (W_t is replicated on every process)")
         self.mesh = multihost.cluster_mesh()
         if config.n_clients % self.mesh.size != 0:
             raise ValueError(

@@ -22,9 +22,11 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import json
+import warnings
 from dataclasses import dataclass, field
-from typing import Mapping, Optional
+from typing import Mapping, Optional, Union
 
+from repro.control.config import ControlConfig
 from repro.core.alternating import METHODS
 from repro.core.topology import GRAPH_FAMILIES
 from repro.data.partition import PARTITIONERS
@@ -39,7 +41,11 @@ MIX_COMM_MODES = ("dense", "sparse", "sparse_overlap")
 MIX_QUANT_MODES = ("off", "int8", "fp8")
 DATA_SOURCES = ("synthetic", "shards")
 
-_KEY_VERSION = 7   # bump when semantics of any field change
+_KEY_VERSION = 8   # bump when semantics of any field change
+
+# legacy flat-knob defaults (pre-v8 configs; see DFLConfig.control)
+_LEGACY_ADAPTIVE = {"adaptive_T": False, "adaptive_c": 0.35,
+                    "adaptive_t_max": 15}
 
 
 @dataclass(frozen=True)
@@ -63,9 +69,18 @@ class DFLConfig:
                                  # straggler drop, phase_switch knobs)
     method: str = "tad"
     T: int = 0                   # switching interval; 0 = topology-aware T*
-    adaptive_T: bool = False     # online T via AdaptiveSchedule
-    adaptive_c: float = 0.35
-    adaptive_t_max: int = 15
+    # DEPRECATED flat adaptive knobs (v7-era). Still accepted: non-default
+    # values emit a DeprecationWarning and map onto `control`; after
+    # resolution they mirror the struct (adaptive_T <-> t_policy,
+    # adaptive_c <-> c, adaptive_t_max <-> t_max), so old- and new-style
+    # configs compare (and cache-key) identically.
+    adaptive_T: Optional[bool] = None     # -> control.t_policy "adaptive"
+    adaptive_c: Optional[float] = None    # -> control.c
+    adaptive_t_max: Optional[int] = None  # -> control.t_max
+    control: Optional[Union[ControlConfig, Mapping]] = None
+                                 # closed-loop control plane policies
+                                 # (repro.control.ControlConfig; dict ok);
+                                 # None resolves to the open-loop default
 
     # -- optimization -------------------------------------------------------
     rounds: int = 40
@@ -119,7 +134,44 @@ class DFLConfig:
             object.__setattr__(self, "data_seed", self.seed)
         if self.init_seed is None:
             object.__setattr__(self, "init_seed", self.seed)
+        self._resolve_control()
         self._validate()
+
+    def _resolve_control(self) -> None:
+        """Resolve the deprecated flat adaptive knobs and the structured
+        `control` field into one canonical ControlConfig, then mirror the
+        struct back onto the flat fields so old-style and new-style
+        configs are field-identical (same equality, same cache key)."""
+        flat = {k: getattr(self, k) for k in _LEGACY_ADAPTIVE}
+        ctrl = self.control
+        if ctrl is not None:
+            ctrl = ControlConfig.coerce(ctrl)
+            # both given (e.g. a to_dict round-trip carrying the mirror):
+            # consistent values pass silently, conflicts are errors
+            mirror = {"adaptive_T": ctrl.t_policy == "adaptive",
+                      "adaptive_c": ctrl.c, "adaptive_t_max": ctrl.t_max}
+            for k, v in flat.items():
+                if v is not None and v != mirror[k]:
+                    raise ValueError(
+                        f"DFLConfig: deprecated {k}={v!r} conflicts with "
+                        f"control={ctrl}; set the ControlConfig field only")
+        else:
+            given = {k: v for k, v in flat.items() if v is not None}
+            resolved = {**_LEGACY_ADAPTIVE, **given}
+            if any(resolved[k] != _LEGACY_ADAPTIVE[k] for k in given):
+                warnings.warn(
+                    "DFLConfig adaptive_T/adaptive_c/adaptive_t_max are "
+                    "deprecated; use control=ControlConfig(t_policy="
+                    "'adaptive', c=..., t_max=...) (repro.control)",
+                    DeprecationWarning, stacklevel=4)
+            ctrl = ControlConfig(
+                t_policy="adaptive" if resolved["adaptive_T"] else "fixed",
+                c=resolved["adaptive_c"],
+                t_max=resolved["adaptive_t_max"])
+        object.__setattr__(self, "control", ctrl)
+        object.__setattr__(self, "adaptive_T", ctrl.t_policy == "adaptive")
+        object.__setattr__(self, "adaptive_c", ctrl.c)
+        object.__setattr__(self, "adaptive_t_max", ctrl.t_max)
 
     def _validate(self) -> None:
         def check(cond, msg):
@@ -191,9 +243,16 @@ class DFLConfig:
         check(self.local_steps > 0, "local_steps must be positive")
         check(self.batch_size > 0, "batch_size must be positive")
         check(self.T >= 0, "T must be >= 0 (0 selects T*(rho))")
-        if self.adaptive_T:
+        if self.control.t_policy == "adaptive":
             check(self.method in ("tad", "rolora"),
-                  "adaptive_T applies to alternating methods only")
+                  "control.t_policy 'adaptive' (deprecated alias "
+                  "adaptive_T) applies to alternating methods only")
+        if self.control.weight_policy == "fmmc":
+            check(self.scenario != "gossip",
+                  "control.weight_policy 'fmmc' rewires Metropolis-weight "
+                  "construction; the 'gossip' pairwise sampler has no "
+                  "weight matrix to optimize — pick a scenario such as "
+                  "'static' or 'edge_activation'")
 
     # -- serialization ------------------------------------------------------
     def to_dict(self) -> dict:
@@ -220,7 +279,18 @@ class DFLConfig:
         """dataclasses.replace with seed re-derivation: when `seed`
         changes and data_seed/init_seed were following it (equal to the
         old seed) and are not explicitly overridden, they follow the new
-        seed instead of freezing at their old resolved values."""
+        seed instead of freezing at their old resolved values. Control
+        fields re-resolve analogously: replacing a deprecated flat knob
+        re-derives `control` from the flat triple, and replacing
+        `control` drops the stale flat mirror."""
+        legacy = [k for k in _LEGACY_ADAPTIVE if k in kw]
+        if legacy and "control" not in kw:
+            kw["control"] = None          # flat knobs win; struct re-derives
+            for k in _LEGACY_ADAPTIVE:
+                kw.setdefault(k, getattr(self, k))
+        elif "control" in kw and not legacy:
+            for k in _LEGACY_ADAPTIVE:
+                kw[k] = None              # struct wins; mirror re-derives
         if "seed" in kw:
             if "data_seed" not in kw and self.data_seed == self.seed:
                 kw["data_seed"] = None

@@ -14,6 +14,12 @@ unifies the two regimes behind `next_masks(t, observations)`:
 currently {"W": np.ndarray, "round": int, "session": Session}. Custom
 schedules (damped mixing, per-round method switching, curriculum phases)
 implement the same protocol and plug into `Session(schedule=...)`.
+
+Rho estimation goes through the unified `RhoEstimator` protocol
+(repro.control.estimators): `AdaptiveSchedule` folds each observed W_t
+into a `RoundStats` payload and updates its estimator, instead of the
+former ad-hoc `observe_mixing_matrix` call — same float sequence, one
+observation surface.
 """
 from __future__ import annotations
 
@@ -22,6 +28,8 @@ from typing import Mapping, Optional, Protocol, runtime_checkable
 
 import numpy as np
 
+from repro.control.estimators import RhoEstimator, SpectralRho
+from repro.control.stats import RoundStats
 from repro.core.adaptive import AdaptiveTController, adaptive_round_masks
 from repro.core.alternating import RoundMasks, round_masks
 
@@ -47,28 +55,44 @@ class StaticSchedule:
 class AdaptiveSchedule:
     """Online T selection (beyond-paper §VII): wraps AdaptiveTController.
 
-    estimator "spectral" feeds each observed W_t to the controller's
-    spectral rho estimator; "none" leaves the controller's rho untouched
-    (useful to drive it externally or to pin T for parity tests).
+    `estimator` selects the ρ̂² route: "spectral" folds each observed W_t
+    into a `SpectralRho` (float-identical to the controller's legacy
+    `observe_mixing_matrix` path); "none" leaves the controller's rho
+    untouched (to drive it externally — e.g. by a `ControlPlane` — or to
+    pin T for parity tests); any `RhoEstimator` instance plugs in as-is.
     `t_trace` records the interval in force at every round.
     """
 
     def __init__(self, method: str = "tad", *, c: float = 0.35,
                  t_max: int = 15, t_min: int = 1, ewma: float = 0.2,
-                 estimator: str = "spectral",
+                 estimator="spectral",
                  controller: Optional[AdaptiveTController] = None):
-        if estimator not in ("spectral", "none"):
-            raise ValueError(f"unknown estimator {estimator!r}")
         self.method = method
         self.estimator = estimator
         self.controller = controller if controller is not None else \
             AdaptiveTController(c=c, t_max=t_max, t_min=t_min, ewma=ewma)
+        if estimator == "spectral":
+            self._est: Optional[RhoEstimator] = SpectralRho(
+                ewma=self.controller.ewma, rho_sq0=self.controller.rho_sq)
+        elif estimator == "none" or estimator is None:
+            self._est = None
+        elif isinstance(estimator, RhoEstimator):
+            self._est = estimator
+        else:
+            raise ValueError(f"unknown estimator {estimator!r} (expected "
+                             f"'spectral', 'none', or a RhoEstimator)")
         self.t_trace: list[int] = []
 
     def next_masks(self, t: int, observations: Mapping) -> RoundMasks:
-        W = observations.get("W") if self.estimator == "spectral" else None
-        if W is not None:
-            self.controller.observe_mixing_matrix(np.asarray(W))
+        if self._est is not None:
+            stats = observations.get("stats")
+            if stats is None:
+                W = observations.get("W")
+                stats = RoundStats(t, np.asarray(W)) if W is not None \
+                    else None
+            if stats is not None:
+                self._est.update(stats)
+                self.controller.rho_sq = self._est.rho_sq
         masks = adaptive_round_masks(self.controller, self.method)
         self.t_trace.append(self.controller.T)
         return masks

@@ -37,6 +37,8 @@ from repro.api.rounds import build_round
 from repro.api.schedule import AdaptiveSchedule, MaskSchedule, StaticSchedule
 from repro.checkpoint import load_pytree, save_pytree
 from repro.configs import get_config
+from repro.control.plane import ControlPlane
+from repro.control.stats import RoundStats, metric_loss as _metric_loss
 from repro.core.alternating import RoundMasks
 from repro.core.diagnostics import consensus_stats
 from repro.core import mixing
@@ -49,7 +51,7 @@ from repro.data.stream import FederatedStream
 from repro.data.synthetic import (eval_batch, federated_batches,
                                   label_skew_partitions, lm_token_stream,
                                   make_task)
-from repro.dist.comm import CommPlan, build_comm_plan
+from repro.dist.comm import CommPlan, build_comm_plan, dense_recv_bytes
 from repro.optim.adamw import AdamW, AdamWState
 from repro.scenarios.library import estimate_rho_sq, schedule_from_config
 from repro.scenarios.schedule import TopologySchedule, schedule_support
@@ -59,40 +61,28 @@ from repro.scenarios.schedule import TopologySchedule, schedule_support
 # round events (lazy views handed to callbacks)
 # ---------------------------------------------------------------------------
 
-def _metric_loss(metrics: Mapping) -> float:
-    """The reported round loss: host-side reduction of the replicated
-    per-client loss vector, in one fixed order — bitwise identical on
-    every process grid. Falls back to the in-graph scalar (whose
-    cross-client reduction XLA may decompose differently per grid) for
-    round functions that predate `loss_per_client`."""
-    pc = metrics.get("loss_per_client") if hasattr(metrics, "get") else None
-    if pc is not None:
-        a = np.asarray(pc, np.float32)          # (local_steps, n)
-        return float(a.mean(axis=-1, dtype=np.float32)
-                      .mean(dtype=np.float32))
-    return float(metrics["loss"])
-
-
 class RoundEvent:
-    """One round's outcome. Derived quantities are memoized properties so
-    uninterested callbacks never pay for them (and several callbacks share
-    one computation). The event snapshots THIS round's lora tree, so a
-    deferred `consensus()` call still describes round t — though under
-    `donate=True` the buffers are consumed by the next round, so compute
-    consensus inside on_round_end there."""
+    """One round's outcome, as callbacks see it. A thin view over the
+    round's `RoundStats` payload (repro.control.stats) — the SAME object
+    `ControlPlane.observe()` consumed, so derived quantities (loss
+    reduction, consensus stats) are memoized once and shared between the
+    control loop and every callback. The stats snapshot THIS round's lora
+    tree, so a deferred `consensus()` call still describes round t —
+    though under `donate=True` the buffers are consumed by the next
+    round, so compute consensus inside on_round_end there."""
 
     def __init__(self, session: "Session", t: int, masks: RoundMasks,
-                 W: np.ndarray, metrics: Mapping, is_last: bool):
+                 W: np.ndarray, metrics: Mapping, is_last: bool,
+                 stats: Optional[RoundStats] = None):
         self.session = session
         self.t = t
         self.masks = masks
         self.W = W
         self.metrics = metrics          # jax arrays — not yet synced
-        self.lora = session.lora        # this round's state (post-mix)
         self.is_last = is_last
-        self._loss: Optional[float] = None
-        self._consensus: Optional[dict] = None
-        self._w_gap: Optional[float] = None
+        self.stats = stats if stats is not None else RoundStats(
+            t, W, masks=masks, metrics=metrics, lora=session.lora)
+        self.lora = self.stats.lora     # this round's state (post-mix)
 
     @property
     def phase(self) -> str:
@@ -100,25 +90,16 @@ class RoundEvent:
 
     @property
     def loss(self) -> float:
-        if self._loss is None:
-            self._loss = _metric_loss(self.metrics)
-        return self._loss
+        return self.stats.loss
 
     def consensus(self) -> dict:
         """Consensus/theory diagnostics of THIS round's LoRA state
         (delta_a_sq, delta_b_sq, cross_norm, cs_bound) as floats."""
-        if self._consensus is None:
-            self._consensus = {k: float(v) for k, v in
-                               consensus_stats(self.lora).items()}
-        return self._consensus
+        return self.stats.consensus()
 
     def w_gap(self) -> float:
         """Spectral distance ||W_t - J||_2 of this round's mixing matrix."""
-        if self._w_gap is None:
-            m = self.W.shape[0]
-            J = np.ones((m, m)) / m
-            self._w_gap = float(np.linalg.norm(self.W - J, ord=2))
-        return self._w_gap
+        return self.stats.w_gap()
 
 
 @dataclass
@@ -276,9 +257,18 @@ class Session:
     `model_cfg` overrides the architecture with a custom ModelConfig;
     `loss_fn(base, lora, micro) -> scalar` overrides the objective;
     `schedule` overrides the mask schedule (default: static T from the
-    config, or `AdaptiveSchedule` when config.adaptive_T);
+    config, or a controller-driven `AdaptiveSchedule` when
+    config.control.t_policy == "adaptive");
     `topology_schedule` overrides the communication condition (default:
     built from config.scenario via `repro.scenarios`).
+
+    An *active* config.control (repro.control.ControlConfig) additionally
+    instantiates a `ControlPlane` at `session.control`: each round's
+    `RoundStats` is fed to `control.observe()` before callbacks fire, the
+    plane's weight policy is installed into the topology schedule's
+    `set_weights` hook, and — for t_policy "adaptive" — the plane's
+    controller drives the mask schedule, retuning T only at phase
+    boundaries (the compiled round never retraces).
     """
 
     def __init__(self, config: DFLConfig, *, model_cfg=None,
@@ -323,6 +313,9 @@ class Session:
                     "schedule's support_adjacency() with the config")
         self._rho: Optional[float] = None
         self._T: Optional[int] = config.T or None
+        self._comm_bytes: Optional[int] = None
+        self.control = self._make_control()
+        self._install_weight_policy()
         self._user_schedule = schedule
         self.schedule = schedule if schedule is not None \
             else self._default_schedule()
@@ -332,11 +325,44 @@ class Session:
         self.last_event: Optional[RoundEvent] = None
         self.reset_state()
 
+    def _make_control(self) -> Optional[ControlPlane]:
+        """The ControlPlane this config asks for (None when the control
+        struct is inert — the open-loop default costs nothing). Under
+        sparse comm the plane's FMMC policy is fed the CommPlan's
+        per-link byte accounting as its bandwidth cost."""
+        cc = self.config.control
+        if cc is None or not cc.active:
+            return None
+        link_cost = None
+        if self.comm_plan is not None:
+            plan = mixing.get_mix_plan(self._lora0)
+            link_cost = self.comm_plan.link_bytes(plan.cols)
+        return ControlPlane(cc, link_cost=link_cost)
+
+    def _install_weight_policy(self) -> None:
+        """Install the control plane's weight policy into the topology
+        schedule's `set_weights` hook (no-op for the Metropolis baseline,
+        which must stay byte-identical to pre-control runs)."""
+        if self.control is None or self.control.weight_policy is None:
+            return
+        hook = getattr(self.topo_schedule, "set_weights", None)
+        if hook is None:
+            raise ValueError(
+                f"control.weight_policy="
+                f"{self.config.control.weight_policy!r} needs a topology "
+                f"schedule with a set_weights() hook; "
+                f"{type(self.topo_schedule).__name__} exposes none — use a "
+                f"Metropolis-based scenario schedule or drop the weight "
+                f"policy")
+        hook(self.control.weight_policy)
+
     def _default_schedule(self) -> MaskSchedule:
         cfg = self.config
-        if cfg.adaptive_T:
-            return AdaptiveSchedule(cfg.method, c=cfg.adaptive_c,
-                                    t_max=cfg.adaptive_t_max)
+        if self.control is not None and self.control.controller is not None:
+            # the plane owns rho estimation (ControlPlane.observe); the
+            # schedule only advances the shared controller's calendar
+            return AdaptiveSchedule(cfg.method, estimator="none",
+                                    controller=self.control.controller)
         return StaticSchedule(cfg.method, self.T)
 
     # -- state --------------------------------------------------------------
@@ -400,6 +426,38 @@ class Session:
         self._batches = self._raw_batch_iter()
         self.t = 0
         self.last_metrics = None
+        self.last_stats: Optional[RoundStats] = None
+        # phase-index tracking for RoundStats (increments at every A/B
+        # boundary; the frozen-contraction estimator pairs Δ² samples only
+        # within one phase)
+        self._phase_idx = 0
+        self._prev_update_a: Optional[bool] = None
+
+    def _track_phase(self, masks: RoundMasks) -> int:
+        ua = bool(masks.update_a)
+        if self._prev_update_a is not None and ua != self._prev_update_a:
+            self._phase_idx += 1
+        self._prev_update_a = ua
+        return self._phase_idx
+
+    def _round_comm_bytes(self) -> int:
+        """Per-round gossip bytes this process RECEIVES under the live
+        lowering (memoized: the flat layout is static across rounds).
+        Dense single-process runs receive 0 — the exchange never leaves
+        the process."""
+        if self._comm_bytes is None:
+            plan = mixing.get_mix_plan(self._lora0)
+            cfg = self.config
+            if self.comm_plan is None:
+                self._comm_bytes = dense_recv_bytes(
+                    cfg.n_clients, jax.process_count(), plan.cols)
+            elif cfg.mix_quant != "off":
+                self._comm_bytes = \
+                    self.comm_plan.sparse_recv_bytes_quant(plan.cols)
+            else:
+                self._comm_bytes = \
+                    self.comm_plan.sparse_recv_bytes(plan.cols)
+        return self._comm_bytes
 
     # -- data ---------------------------------------------------------------
     # raw (numpy) draws and device conversion are split so checkpoint
@@ -534,12 +592,21 @@ class Session:
                 self.base, self.lora, self.opt_state, batch, W_dev,
                 masks_dev)
         self.last_metrics = metrics
+        # one observation payload per round, shared by the control loop
+        # and every callback (construction is lazy — no device sync here)
+        stats = RoundStats(t, W_np, phase=self._track_phase(masks),
+                           masks=masks, metrics=metrics, lora=self.lora,
+                           comm_bytes=self._round_comm_bytes())
+        self.last_stats = stats
+        if self.control is not None:
+            self.control.observe(stats)
         # t advances BEFORE callbacks fire: a checkpoint taken inside a
         # callback resumes after the round it just observed
         self.t = t + 1
         ev = None
         if want_event or (notify and self.callbacks):
-            ev = RoundEvent(self, t, masks, W_np, metrics, is_last)
+            ev = RoundEvent(self, t, masks, W_np, metrics, is_last,
+                            stats=stats)
         if notify and ev is not None:
             for cb in self.callbacks:
                 cb.on_round_end(ev)
@@ -628,6 +695,10 @@ class Session:
         if self._user_topo_schedule is None:
             self.topo_schedule = schedule_from_config(
                 cfg, topology=self.topology)
+        # fresh control plane (estimator/controller state replays below)
+        # and re-install its weight policy into the rebuilt schedule
+        self.control = self._make_control()
+        self._install_weight_policy()
         if self._user_schedule is None:
             self.schedule = self._default_schedule()
         saved_round = int(np.asarray(tree["meta"]["round"]))
@@ -640,8 +711,13 @@ class Session:
                 next(self._batches)          # data RNG replay (numpy only)
         for t in range(saved_round):
             W = self.topo_schedule.next_w(t)  # topology RNG replay
-            self.schedule.next_masks(
+            masks = self.schedule.next_masks(
                 t, {"W": W, "round": t, "session": self})
+            self._track_phase(masks)
+            if self.control is not None:
+                # W-only replay: spectral/gram re-estimate exactly; the
+                # frozen probe resets and re-locks from live rounds
+                self.control.observe_replay(t, W)
         self.lora = jax.tree.map(jnp.asarray, tree["lora"])
         opt = tree["opt"]
         self.opt_state = AdamWState(

@@ -1,0 +1,26 @@
+"""`repro.control` — the bandwidth-aware closed-loop control plane.
+
+Host-side policy layer between the declarative config (`repro.api`) and
+the core math (`repro.core`): estimates ρ from live traffic, optimizes
+mixing weights against measured per-link bandwidth, and retunes T at
+phase boundaries — while the compiled round keeps consuming W_t and the
+masks as plain data (one compile across every policy). Layering: this
+package imports `repro.core` only; `repro.api` imports it, never the
+reverse.
+"""
+from repro.control.config import (ControlConfig, RHO_ESTIMATORS,
+                                  T_POLICIES, WEIGHT_POLICIES)
+from repro.control.estimators import (FrozenContractionRho, GramRho,
+                                      RhoEstimator, SpectralRho,
+                                      make_estimator)
+from repro.control.plane import (ControlPlane, FMMCWeightPolicy,
+                                 metropolis_policy, weight_conformance)
+from repro.control.stats import RoundStats, metric_loss
+
+__all__ = [
+    "ControlConfig", "ControlPlane", "RoundStats",
+    "RhoEstimator", "SpectralRho", "FrozenContractionRho", "GramRho",
+    "make_estimator", "FMMCWeightPolicy", "metropolis_policy",
+    "weight_conformance", "metric_loss",
+    "T_POLICIES", "RHO_ESTIMATORS", "WEIGHT_POLICIES",
+]

@@ -1,0 +1,91 @@
+"""`ControlConfig` — the structured description of the closed control loop.
+
+Replaces the flat `adaptive_T` / `adaptive_c` / `adaptive_t_max` DFLConfig
+knobs (still accepted, deprecated) with one validated sub-config carrying
+the three policy axes of the control plane:
+
+  t_policy       "fixed" | "adaptive"     — phase-aware T retuning
+                 (Theorem V.3: T*(ρ) = c/√(1−ρ), applied only at phase
+                 boundaries so the compiled round never retraces)
+  rho_estimator  "spectral" | "frozen" | "gram"  — which live-traffic ρ̂²
+                 route feeds the loop (repro.control.estimators)
+  weight_policy  "metropolis" | "fmmc"   — how schedules turn fired
+                 adjacencies into W_t (fastest-mixing weights optionally
+                 biased by measured per-link bandwidth)
+
+Like every DFLConfig field the struct is pure data: the compiled round is
+oblivious to it, and `DFLConfig.cache_key()` hashes it through the normal
+to_dict route (key version v8).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Mapping, Optional, Union
+
+T_POLICIES = ("fixed", "adaptive")
+RHO_ESTIMATORS = ("spectral", "frozen", "gram")
+WEIGHT_POLICIES = ("metropolis", "fmmc")
+
+
+@dataclass(frozen=True)
+class ControlConfig:
+    """Validated control-plane policy selection (a DFLConfig sub-config).
+
+    Defaults describe the open-loop baseline — fixed T, Metropolis
+    weights — under which the control plane is inert (`active` is False)
+    and a Session behaves exactly as before the redesign.
+    """
+
+    t_policy: str = "fixed"          # "adaptive" = online T*(ρ̂)
+    rho_estimator: str = "spectral"  # ρ̂² route feeding the T loop
+    weight_policy: str = "metropolis"  # W_t construction policy
+    c: float = 0.35                  # T*(ρ) = c/√(1−ρ̂)
+    t_min: int = 1
+    t_max: int = 15
+    ewma: float = 0.2                # ρ̂² smoothing (spectral/frozen)
+    gram_window: int = 32            # trailing W window (gram estimator)
+    fmmc_iters: int = 120            # projected-subgradient iterations
+    fmmc_cost_weight: float = 0.0    # bandwidth-penalty weight (0 = pure
+                                     # fastest mixing)
+
+    def __post_init__(self):
+        def check(cond, msg):
+            if not cond:
+                raise ValueError(f"ControlConfig: {msg}")
+
+        check(self.t_policy in T_POLICIES,
+              f"unknown t_policy {self.t_policy!r}; known: {T_POLICIES}")
+        check(self.rho_estimator in RHO_ESTIMATORS,
+              f"unknown rho_estimator {self.rho_estimator!r}; "
+              f"known: {RHO_ESTIMATORS}")
+        check(self.weight_policy in WEIGHT_POLICIES,
+              f"unknown weight_policy {self.weight_policy!r}; "
+              f"known: {WEIGHT_POLICIES}")
+        check(self.c > 0, "c must be positive")
+        check(self.t_min >= 1, "t_min must be >= 1")
+        check(self.t_max >= self.t_min, "t_max must be >= t_min")
+        check(0.0 < self.ewma <= 1.0, "ewma must be in (0, 1]")
+        check(self.gram_window >= 1, "gram_window must be >= 1")
+        check(self.fmmc_iters >= 1, "fmmc_iters must be >= 1")
+        check(self.fmmc_cost_weight >= 0.0,
+              "fmmc_cost_weight must be >= 0")
+
+    @property
+    def active(self) -> bool:
+        """True when any loop departs from the open-loop baseline (the
+        Session only instantiates a ControlPlane for active configs)."""
+        return self.t_policy != "fixed" or self.weight_policy != "metropolis"
+
+    @classmethod
+    def coerce(cls, value: Union["ControlConfig", Mapping, None]
+               ) -> "ControlConfig":
+        """Accept a ControlConfig, a plain mapping (JSON round-trips), or
+        None (defaults)."""
+        if value is None:
+            return cls()
+        if isinstance(value, cls):
+            return value
+        if isinstance(value, Mapping):
+            return cls(**dict(value))
+        raise ValueError(f"ControlConfig: cannot coerce {type(value).__name__}"
+                         f" (expected ControlConfig, mapping, or None)")

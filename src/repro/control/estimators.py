@@ -1,0 +1,112 @@
+"""`RhoEstimator` — one protocol over the three live-traffic ρ̂² routes.
+
+Before the control plane these lived apart: the spectral EWMA and the
+frozen-contraction probe as `AdaptiveTController.observe_*` methods in
+`repro.core.adaptive`, the gram route as the standalone
+`rho_sq_from_samples` in `repro.core.topology`. This module unifies them
+behind `update(stats) -> None` over a `RoundStats` payload:
+
+  SpectralRho           EWMA of ||W_t − J||₂²  — cheap, per-round, needs
+                        only the realized schedule (always available).
+  FrozenContractionRho  Lemma A.4 consensus probe: the frozen block's Δ²
+                        contracts at exactly ρ² per round, so the ratio
+                        of consecutive Δ² is an unbiased sample. Needs
+                        state snapshots; resets at phase boundaries (the
+                        frozen block changes) and across observation gaps.
+  GramRho               ρ̂² = ||mean_t W_tᵀW_t − J||₂ over a trailing
+                        window — the tight route for the Appendix A-A
+                        mean-square assumption under time-varying graphs.
+
+The float math of the first two delegates to the shared update functions
+in `repro.core.adaptive`, so an estimator-driven controller reproduces
+the legacy `observe_*` trajectories bit-for-bit.
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Protocol, runtime_checkable
+
+import numpy as np
+
+from repro.core.adaptive import (contraction_rho_sq_update,
+                                 spectral_rho_sq_update)
+from repro.core.topology import rho_sq_from_samples
+from repro.control.config import RHO_ESTIMATORS
+from repro.control.stats import RoundStats
+
+
+@runtime_checkable
+class RhoEstimator(Protocol):
+    """Anything that folds RoundStats into a running ρ̂² estimate."""
+
+    rho_sq: float
+
+    def update(self, stats: RoundStats) -> None:
+        ...
+
+
+class SpectralRho:
+    """Spectral route: ρ̂² ← EWMA of ||W_t − J||₂² per observed round."""
+
+    def __init__(self, ewma: float = 0.2, rho_sq0: float = 0.5):
+        self.ewma = float(ewma)
+        self.rho_sq = float(rho_sq0)
+
+    def update(self, stats: RoundStats) -> None:
+        self.rho_sq = spectral_rho_sq_update(self.rho_sq,
+                                             np.asarray(stats.W), self.ewma)
+
+
+class FrozenContractionRho:
+    """Consensus-probe route (Lemma A.4): ρ̂² from the contraction of the
+    frozen block's Δ² between consecutive same-phase rounds. Stats without
+    a state snapshot (replay, W-only observations) reset the probe — a
+    ratio across a gap would not measure one round's contraction. Note
+    the probe needs phases of length ≥ 2: at T = 1 the frozen block
+    switches every round, so no two consecutive Δ² describe the same
+    gossip-only block and the estimate keeps its prior."""
+
+    def __init__(self, ewma: float = 0.2, rho_sq0: float = 0.5):
+        self.ewma = float(ewma)
+        self.rho_sq = float(rho_sq0)
+        self._prev_delta_sq: float | None = None
+        self._prev_phase: int | None = None
+
+    def update(self, stats: RoundStats) -> None:
+        delta_sq = stats.frozen_delta_sq()
+        if delta_sq is None:
+            self._prev_delta_sq = None
+            self._prev_phase = None
+            return
+        if self._prev_delta_sq is not None \
+                and stats.phase == self._prev_phase:
+            self.rho_sq = contraction_rho_sq_update(
+                self.rho_sq, self._prev_delta_sq, delta_sq, self.ewma)
+        self._prev_delta_sq = delta_sq
+        self._prev_phase = stats.phase
+
+
+class GramRho:
+    """Gram route: ρ̂² = ||mean WᵀW − J||₂ over the trailing `window`
+    observed mixing matrices (`rho_sq_from_samples`)."""
+
+    def __init__(self, window: int = 32, rho_sq0: float = 0.5):
+        self.rho_sq = float(rho_sq0)
+        self._ws: deque = deque(maxlen=int(window))
+
+    def update(self, stats: RoundStats) -> None:
+        self._ws.append(np.asarray(stats.W, dtype=float))
+        self.rho_sq = rho_sq_from_samples(self._ws)
+
+
+def make_estimator(kind: str, *, ewma: float = 0.2, window: int = 32,
+                   rho_sq0: float = 0.5) -> RhoEstimator:
+    """Estimator from its ControlConfig name."""
+    if kind == "spectral":
+        return SpectralRho(ewma=ewma, rho_sq0=rho_sq0)
+    if kind == "frozen":
+        return FrozenContractionRho(ewma=ewma, rho_sq0=rho_sq0)
+    if kind == "gram":
+        return GramRho(window=window, rho_sq0=rho_sq0)
+    raise ValueError(f"unknown rho estimator {kind!r}; "
+                     f"known: {RHO_ESTIMATORS}")

@@ -1,0 +1,172 @@
+"""`ControlPlane` — the host-side closed loop that runs between rounds.
+
+The compiled DFL round treats W_t and the phase masks as *data*; the
+ControlPlane is the host process that decides what that data should be.
+Between rounds it closes three loops, each selected by `ControlConfig`:
+
+  (a) online ρ estimation — a `RhoEstimator` (repro.control.estimators)
+      folds each round's `RoundStats` into ρ̂²;
+  (b) fastest-mixing edge weights — a weight policy installed into the
+      topology schedule's `set_weights` hook rewires W_t construction
+      from Metropolis to FMMC weights (`fastest_mixing_weights`),
+      optionally biased by measured per-link bandwidth
+      (`CommPlan.link_bytes`);
+  (c) phase-aware T switching — ρ̂² feeds the `AdaptiveTController`,
+      which re-selects T ONLY at phase boundaries, so the jitted round
+      sees the same shapes every round and never retraces
+      (`round_fn._cache_size()` stays 1 across all policies).
+
+Every weight policy emits a conformance predicate (`weight_conformance`)
+tying its realized W_t stream back to the Lemma A.10 / λ2(L) bound
+1−ρ ≥ c_mix·p_eff·λ2(L) plus the structural gossip invariants (symmetry,
+double stochasticity, non-negativity).
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import numpy as np
+
+from repro.core.adaptive import AdaptiveTController
+from repro.core.topology import (fastest_mixing_weights, lemma_a10_gap_bound,
+                                 metropolis_weights, rho_sq_from_samples)
+from repro.control.config import ControlConfig
+from repro.control.estimators import make_estimator
+from repro.control.stats import RoundStats
+
+# a weight policy maps the UNDERLYING adjacency to a per-round weight
+# function over fired adjacencies: policy(adj) -> (fired_adj -> W)
+WeightFn = Callable[[np.ndarray], np.ndarray]
+WeightPolicy = Callable[[np.ndarray], WeightFn]
+
+
+def metropolis_policy(adj: np.ndarray) -> WeightFn:
+    """The baseline policy: per-round Metropolis weights of whatever
+    subgraph fired (the underlying adjacency plays no role)."""
+    return metropolis_weights
+
+
+class FMMCWeightPolicy:
+    """Fastest-mixing weight policy: optimize FMMC edge weights ONCE on
+    the underlying adjacency (`fastest_mixing_weights`, optionally
+    bandwidth-biased via `link_cost`), then restrict to the fired
+    subgraph each round: W_t = I − L(w ∘ fired). Dropping edges only
+    grows the diagonal, so W_t stays symmetric, doubly stochastic and
+    non-negative for every fired subset — and equals the optimized W on
+    static graphs. The per-round cost is one masked copy, not a solve."""
+
+    def __init__(self, link_cost: Optional[np.ndarray] = None, *,
+                 iters: int = 120, cost_weight: float = 0.0):
+        self.link_cost = link_cost
+        self.iters = int(iters)
+        self.cost_weight = float(cost_weight)
+
+    def __call__(self, adj: np.ndarray) -> WeightFn:
+        adj = np.asarray(adj, dtype=float)
+        cost = self.link_cost
+        if cost is not None and np.shape(cost) != adj.shape:
+            # e.g. a PhaseSwitch sub-graph over a different client count
+            # than the CommPlan measured — fall back to unbiased FMMC
+            cost = None
+        W_star = fastest_mixing_weights(adj, cost, iters=self.iters,
+                                        cost_weight=self.cost_weight)
+        w_edge = W_star.copy()
+        np.fill_diagonal(w_edge, 0.0)
+
+        def weight_fn(fired: np.ndarray) -> np.ndarray:
+            f = (np.asarray(fired) > 0).astype(float)
+            np.fill_diagonal(f, 0.0)
+            W = w_edge * f
+            np.fill_diagonal(W, 1.0 - W.sum(1))
+            return W
+
+        return weight_fn
+
+
+def weight_conformance(Ws, adj: np.ndarray, p_eff: float = 1.0,
+                       c_mix: float = 1.0 / 16.0) -> dict:
+    """The per-policy conformance predicate over a stream of realized
+    mixing matrices: structural gossip invariants per sample (symmetry,
+    double stochasticity, non-negativity) plus the Lemma A.10 spectral
+    bound on the TIME-AVERAGED contraction — 1−ρ̂ ≥ c_mix·p_eff·λ2(L),
+    with ρ̂² from the gram route (per-round gaps can legitimately be 0
+    when few edges fire; the bound is a mean-square statement).
+
+    Returns {"sym_err", "ds_err", "min_entry", "gap", "bound", "ok"}.
+    """
+    Ws = [np.asarray(W, dtype=float) for W in Ws]
+    if not Ws:
+        raise ValueError("weight_conformance needs at least one W sample")
+    sym_err = max(float(np.abs(W - W.T).max()) for W in Ws)
+    ds_err = max(max(float(np.abs(W.sum(0) - 1.0).max()),
+                     float(np.abs(W.sum(1) - 1.0).max())) for W in Ws)
+    min_entry = min(float(W.min()) for W in Ws)
+    gap = 1.0 - float(np.sqrt(rho_sq_from_samples(Ws)))
+    bound = lemma_a10_gap_bound(np.asarray(adj), p_eff, c_mix=c_mix)
+    ok = (sym_err < 1e-8 and ds_err < 1e-8 and min_entry > -1e-12
+          and gap >= bound - 1e-9)
+    return {"sym_err": sym_err, "ds_err": ds_err, "min_entry": min_entry,
+            "gap": gap, "bound": bound, "ok": ok}
+
+
+class ControlPlane:
+    """The closed-loop controller a Session instantiates for an active
+    `ControlConfig`. Owns one `RhoEstimator`, at most one
+    `AdaptiveTController` (t_policy "adaptive"), and at most one weight
+    policy (weight_policy "fmmc" — "metropolis" installs nothing so the
+    baseline path stays byte-identical). `observe()` consumes the same
+    `RoundStats` the `RoundEvent` callbacks see."""
+
+    def __init__(self, config: ControlConfig = ControlConfig(), *,
+                 link_cost: Optional[np.ndarray] = None):
+        self.config = ControlConfig.coerce(config)
+        cc = self.config
+        self.estimator = make_estimator(cc.rho_estimator, ewma=cc.ewma,
+                                        window=cc.gram_window)
+        self.controller: Optional[AdaptiveTController] = None
+        if cc.t_policy == "adaptive":
+            self.controller = AdaptiveTController(
+                c=cc.c, ewma=cc.ewma, t_min=cc.t_min, t_max=cc.t_max)
+        self.weight_policy: Optional[WeightPolicy] = None
+        if cc.weight_policy == "fmmc":
+            self.weight_policy = FMMCWeightPolicy(
+                link_cost, iters=cc.fmmc_iters,
+                cost_weight=cc.fmmc_cost_weight)
+        self.link_cost = link_cost
+        self.history: list = []          # per-observation telemetry rows
+
+    # -- readouts -----------------------------------------------------------
+    @property
+    def rho_hat(self) -> float:
+        """Current contraction estimate ρ̂ = √ρ̂²."""
+        return float(np.sqrt(self.estimator.rho_sq))
+
+    @property
+    def T(self) -> Optional[int]:
+        """Interval currently in force (None under t_policy 'fixed')."""
+        return self.controller.T if self.controller is not None else None
+
+    # -- the loop -----------------------------------------------------------
+    def observe(self, stats: RoundStats) -> None:
+        """Fold one completed round into the loop: update ρ̂², propagate it
+        to the T controller (which applies it only at the NEXT phase
+        boundary — mid-phase retuning would desynchronize the clients'
+        phase calendars, the instability the paper's Alg. 1 avoids), and
+        append a telemetry row."""
+        self.estimator.update(stats)
+        if self.controller is not None:
+            self.controller.rho_sq = self.estimator.rho_sq
+        self.history.append({"t": stats.t,
+                             "rho_sq": float(self.estimator.rho_sq),
+                             "T": self.controller.T
+                             if self.controller is not None else 0,
+                             "phase": stats.phase,
+                             "comm_bytes": stats.comm_bytes})
+
+    def observe_replay(self, t: int, W: np.ndarray) -> None:
+        """Checkpoint-replay hook: re-feed the recorded W_t stream as
+        W-only stats. Spectral and gram replay exactly (they consume only
+        W); the frozen probe resets and re-locks from live rounds — its
+        Δ² inputs are a function of training state that replay does not
+        re-materialize."""
+        self.observe(RoundStats(t, W))

@@ -27,6 +27,31 @@ from dataclasses import dataclass, field
 import numpy as np
 
 
+def spectral_rho_sq_update(rho_sq: float, W: np.ndarray,
+                           ewma: float) -> float:
+    """One spectral-estimator step: EWMA of ||W_t − J||₂² into ρ̂².
+    Shared by `AdaptiveTController.observe_mixing_matrix` and the control
+    plane's `SpectralRho` (repro.control.estimators) so both routes are
+    float-identical."""
+    m = W.shape[0]
+    J = np.ones((m, m)) / m
+    s2 = float(np.linalg.norm(W - J, ord=2) ** 2)
+    return (1 - ewma) * rho_sq + ewma * s2
+
+
+def contraction_rho_sq_update(rho_sq: float, delta_sq_prev: float,
+                              delta_sq_now: float, ewma: float) -> float:
+    """One consensus-probe step (Lemma A.4): the frozen block's Δ²
+    contracts at ρ² per round, so the clipped ratio of consecutive Δ² is
+    a ρ̂² sample. A vanishing previous Δ² (consensus already reached, or
+    the probe just reset) carries no signal — the estimate is returned
+    unchanged."""
+    if delta_sq_prev > 1e-12:
+        ratio = min(max(delta_sq_now / delta_sq_prev, 0.0), 1.0)
+        return (1 - ewma) * rho_sq + ewma * ratio
+    return rho_sq
+
+
 @dataclass
 class AdaptiveTController:
     c: float = 1.0                  # T*(ρ) = c/√(1−ρ)
@@ -41,18 +66,14 @@ class AdaptiveTController:
     # -- estimators ---------------------------------------------------------
     def observe_mixing_matrix(self, W: np.ndarray) -> None:
         """Spectral estimator: ρ̂² ← EWMA of ||W_t − J||₂²."""
-        m = W.shape[0]
-        J = np.ones((m, m)) / m
-        s2 = float(np.linalg.norm(W - J, ord=2) ** 2)
-        self.rho_sq = (1 - self.ewma) * self.rho_sq + self.ewma * s2
+        self.rho_sq = spectral_rho_sq_update(self.rho_sq, W, self.ewma)
 
     def observe_frozen_contraction(self, delta_sq_prev: float,
                                    delta_sq_now: float) -> None:
         """Consensus-probe estimator (Lemma A.4): frozen-block Δ² contracts
         at ρ² per gossip round."""
-        if delta_sq_prev > 1e-12:
-            ratio = min(max(delta_sq_now / delta_sq_prev, 0.0), 1.0)
-            self.rho_sq = (1 - self.ewma) * self.rho_sq + self.ewma * ratio
+        self.rho_sq = contraction_rho_sq_update(
+            self.rho_sq, delta_sq_prev, delta_sq_now, self.ewma)
 
     # -- schedule -----------------------------------------------------------
     def target_T(self) -> int:

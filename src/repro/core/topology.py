@@ -13,8 +13,10 @@ Implemented here:
     plus arbitrary adjacency;
   * per-round W_t sampling via sequential pairwise averaging in random order
     (exactly Lemma A.10's model, so W_t is doubly stochastic by
-    construction), and Metropolis–Hastings weights (symmetric doubly
-    stochastic, the scenario library's constructor);
+    construction), Metropolis–Hastings weights (symmetric doubly
+    stochastic, the scenario library's constructor), and fastest-mixing
+    (FMMC) weights by projected subgradient — the control plane's
+    bandwidth-aware alternative;
   * spectral diagnostics: λ2(L), ρ estimation (both the ||E[WᵀW] − J||₂
     gram route and per-sample Monte-Carlo), effective spectral gap, and
     the Lemma A.10 contraction lower bound 1−ρ ≥ c_mix·p·λ2(L).
@@ -167,20 +169,115 @@ def lambda2(adj: np.ndarray) -> float:
     return float(ev[1]) if len(ev) > 1 else 0.0
 
 
+def _check_adjacency(a: np.ndarray, who: str) -> np.ndarray:
+    """Validate a weight-construction adjacency: square, finite, symmetric
+    support. Returns the 0/1 support with an empty diagonal."""
+    a = np.asarray(a, dtype=float)
+    if a.ndim != 2 or a.shape[0] != a.shape[1]:
+        raise ValueError(f"{who}: adjacency must be a square matrix, "
+                         f"got shape {a.shape}")
+    if not np.isfinite(a).all():
+        raise ValueError(f"{who}: adjacency must be finite")
+    s = (a > 0).astype(float)
+    np.fill_diagonal(s, 0.0)
+    if not np.array_equal(s, s.T):
+        raise ValueError(f"{who}: adjacency support must be symmetric "
+                         f"(gossip edges are undirected)")
+    return s
+
+
 def metropolis_weights(adj: np.ndarray) -> np.ndarray:
     """Metropolis–Hastings mixing matrix of a graph: W[i,j] =
     1/(1+max(d_i,d_j)) on edges, diagonal = 1 − row sum. Symmetric, doubly
-    stochastic, non-negative for any adjacency — including graphs with
-    isolated nodes, whose rows degenerate to e_i (the identity row/col
-    "repair" the churn/straggler scenarios rely on)."""
-    a = (np.asarray(adj) > 0).astype(float)
-    np.fill_diagonal(a, 0.0)
+    stochastic, non-negative for any validated adjacency — including graphs
+    with isolated nodes, whose rows degenerate to e_i (the identity row/col
+    "repair" the churn/straggler scenarios rely on), and the all-zero
+    adjacency, which yields the identity. Raises ValueError on non-square,
+    non-finite, or asymmetric-support input instead of silently producing a
+    non-stochastic W."""
+    a = _check_adjacency(adj, "metropolis_weights")
     deg = a.sum(1)
-    with np.errstate(divide="ignore"):
-        inv = 1.0 / (1.0 + np.maximum(deg[:, None], deg[None, :]))
+    inv = 1.0 / (1.0 + np.maximum(deg[:, None], deg[None, :]))
     W = a * inv
     np.fill_diagonal(W, 1.0 - W.sum(1))
     return W
+
+
+def fastest_mixing_weights(adj: np.ndarray,
+                           link_cost: Optional[np.ndarray] = None, *,
+                           iters: int = 120, step: float = 0.4,
+                           cost_weight: float = 0.0) -> np.ndarray:
+    """Fastest-mixing symmetric weights (Boyd–Diaconis–Xiao FMMC) by
+    projected subgradient — no solver dependency.
+
+    Minimizes μ(W) = ||W − J||₂ over W = I − Σ_e w_e (e_i−e_j)(e_i−e_j)ᵀ
+    with w ≥ 0 and per-node Σ_{e∋i} w_e ≤ 1 (so W stays elementwise
+    non-negative: a subfamily of the FMMC feasible set that every gossip
+    predicate in this repo assumes). The subgradient of μ at the active
+    eigenvector u is ∂μ/∂w_e = ∓(u_i − u_j)²; projection is a clip plus a
+    per-node edge-sum repair. Deterministic: initialized at
+    `metropolis_weights` and tracking the best iterate, so the returned
+    spectral gap is never worse than Metropolis (when cost_weight = 0).
+
+    `link_cost` is an optional (m, m) per-link cost (e.g. bytes moved per
+    round from `CommPlan.link_bytes`); with cost_weight > 0 the objective
+    gains `cost_weight · Σ_e c_e w_e` (costs normalized to mean 1 over
+    edges), trading spectral gap against traffic on expensive links.
+    """
+    a = _check_adjacency(adj, "fastest_mixing_weights")
+    m = a.shape[0]
+    ii, jj = np.triu_indices(m, k=1)
+    on = a[ii, jj] > 0
+    ii, jj = ii[on], jj[on]
+    if len(ii) == 0:
+        return np.eye(m)
+    if link_cost is not None:
+        c = np.asarray(link_cost, dtype=float)
+        if c.shape != (m, m):
+            raise ValueError(f"fastest_mixing_weights: link_cost shape "
+                             f"{c.shape} != adjacency shape {(m, m)}")
+        c = np.maximum(c[ii, jj], 0.0)
+        c = c / c.mean() if c.mean() > 0 else np.zeros_like(c)
+    else:
+        c = np.zeros(len(ii))
+    J = np.ones((m, m)) / m
+
+    def build(w: np.ndarray) -> np.ndarray:
+        W = np.zeros((m, m))
+        W[ii, jj] = w
+        W = W + W.T
+        np.fill_diagonal(W, 1.0 - W.sum(1))
+        return W
+
+    def objective(w: np.ndarray) -> float:
+        return float(np.linalg.norm(build(w) - J, ord=2)
+                     + cost_weight * (c @ w))
+
+    w = metropolis_weights(a)[ii, jj].copy()
+    best_w, best_obj = w.copy(), objective(w)
+    for k in range(max(int(iters), 0)):
+        evals, evecs = np.linalg.eigh(build(w) - J)
+        if evals[-1] >= -evals[0]:          # μ attained at λ_max(W − J)
+            u = evecs[:, -1]
+            g = -((u[ii] - u[jj]) ** 2)
+        else:                               # μ attained at −λ_min(W − J)
+            u = evecs[:, 0]
+            g = (u[ii] - u[jj]) ** 2
+        w = np.clip(w - (step / np.sqrt(k + 1.0)) * (g + cost_weight * c),
+                    0.0, None)
+        for _ in range(8):                  # per-node edge-sum ≤ 1 repair
+            s = np.zeros(m)
+            np.add.at(s, ii, w)
+            np.add.at(s, jj, w)
+            over = s > 1.0
+            if not over.any():
+                break
+            f = np.where(over, 1.0 / np.maximum(s, 1e-12), 1.0)
+            w = w * np.minimum(f[ii], f[jj])
+        obj = objective(w)
+        if obj < best_obj - 1e-12:
+            best_obj, best_w = obj, w.copy()
+    return build(best_w)
 
 
 def rho_sq_from_samples(Ws) -> float:

@@ -79,6 +79,20 @@ class CommPlan:
         per_row = payload_itemsize * cols + scale_itemsize
         return per_row * self.k * (self.n_shards - 1)
 
+    def link_bytes(self, cols: int, itemsize: int = 4) -> np.ndarray:
+        """Per-link byte cost matrix of the sparse exchange: ``(m, m)``
+        floats where entry (i, j) is the bytes/round that support link
+        moving client j's flat row toward client i costs — ``itemsize *
+        cols`` when the link crosses a shard boundary, 0 for co-located
+        links (the halo never leaves the process) and off-support pairs.
+        This is the measured bandwidth figure the control plane feeds to
+        `fastest_mixing_weights` as its ``link_cost``: FMMC then trades
+        spectral gap against weight placed on expensive cross-process
+        links."""
+        owner = np.arange(self.m) // self.m_loc
+        cross = self.support & (owner[:, None] != owner[None, :])
+        return (float(itemsize) * cols) * cross.astype(float)
+
     def signature(self) -> str:
         """Stable hex id of (support, grid) — build-cache key material."""
         h = hashlib.md5()

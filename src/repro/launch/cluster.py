@@ -55,6 +55,14 @@ def _preset_config(args) -> dict:
                rounds=args.rounds, local_steps=args.local_steps,
                lr=args.lr, seed=args.seed, mix_comm=args.mix_comm,
                mix_quant=args.mix_quant)
+    if args.weight_policy != "metropolis" or args.t_policy != "fixed":
+        if args.weight_policy == "fmmc" and args.scenario == "gossip":
+            # the default scenario's pairwise sampler has no weight
+            # matrix for FMMC to rewire; picking the policy implies a
+            # weighted schedule
+            cfg["scenario"] = "edge_activation"
+        cfg["control"] = dict(weight_policy=args.weight_policy,
+                              t_policy=args.t_policy)
     return cfg
 
 
@@ -79,6 +87,7 @@ def _comm_bytes(session) -> dict:
     dense_b = comm.dense_recv_bytes(cp.m, cp.n_shards, plan.cols)
     sparse_b = cp.sparse_recv_bytes(plan.cols)
     quant_b = cp.sparse_recv_bytes_quant(plan.cols)
+    link_b = cp.link_bytes(plan.cols)
     mode = session.config.mix_comm
     quant = session.config.mix_quant
     active = dense_b if mode == "dense" else \
@@ -90,6 +99,9 @@ def _comm_bytes(session) -> dict:
         "dense_comm_bytes_per_round": dense_b,
         "sparse_comm_bytes_per_round": sparse_b,
         "sparse_quant_comm_bytes_per_round": quant_b,
+        # per-link surface: what the control plane's FMMC cost term sees
+        "cross_links": cp.cross_edges,
+        "max_link_bytes_per_round": float(link_b.max()),
     }
 
 
@@ -263,6 +275,13 @@ def _parser() -> argparse.ArgumentParser:
                          "exchange (DFLConfig.mix_quant)")
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--weight-policy", default="metropolis",
+                    choices=("metropolis", "fmmc"),
+                    help="closed-loop mixing weights "
+                         "(ControlConfig.weight_policy)")
+    ap.add_argument("--t-policy", default="fixed",
+                    choices=("fixed", "adaptive"),
+                    help="closed-loop T retuning (ControlConfig.t_policy)")
     # run control / artifacts
     ap.add_argument("--run-rounds", type=int, default=0,
                     help="rounds to run now (0 = config.rounds)")

@@ -36,7 +36,8 @@ def main() -> None:
                     choices=("complete", "ring", "erdos_renyi"))
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--adaptive-t", action="store_true",
-                    help="online T via the spectral AdaptiveTController")
+                    help="online T via the control plane's spectral "
+                         "estimator (ControlConfig t_policy='adaptive')")
     ap.add_argument("--mix-flat-lowering", default="auto",
                     choices=("auto", "flat", "per_segment"))
     ap.add_argument("--full", action="store_true",
@@ -49,7 +50,8 @@ def main() -> None:
     config = DFLConfig(
         model=args.arch, task="lm", reduced=not args.full,
         n_clients=args.clients, topology=args.topology, p=args.p,
-        method=args.method, T=args.interval, adaptive_T=args.adaptive_t,
+        method=args.method, T=args.interval,
+        control={"t_policy": "adaptive"} if args.adaptive_t else None,
         rounds=args.rounds, local_steps=args.local_steps,
         batch_size=args.batch, seq_len=args.seq, lr=args.lr,
         mix_flat_lowering=args.mix_flat_lowering, seed=args.seed,

@@ -38,6 +38,15 @@ All Metropolis-based schedules emit symmetric W_t (`symmetric=True`);
 `GossipSchedule` emits products of pairwise averagers (`symmetric=False`),
 still doubly stochastic by construction.
 
+Weight policies: every Metropolis-based schedule exposes a
+``set_weights(policy)`` hook — ``policy(underlying_adj)`` returns the
+per-round weight function ``fired_adj -> W`` (default: Metropolis). The
+control plane (repro.control) installs its FMMC policy through this hook,
+so *which edges fire* stays the scenario's business while *how fired
+edges are weighted* becomes the control plane's. `GossipSchedule` has no
+hook: the pairwise sampler owns no weight matrix (DFLConfig rejects
+weight_policy='fmmc' on the gossip scenario).
+
 Two optional traits the cluster/sparse-comm layer reads (absent on
 user-supplied schedules -> conservative defaults):
 
@@ -144,6 +153,11 @@ class StaticGraph:
         self.m = self.adj.shape[0]
         self._W = metropolis_weights(self.adj)
 
+    def set_weights(self, policy) -> None:
+        """Install a weight policy (control plane hook): `policy(adj)`
+        yields the weight function, evaluated once on the static graph."""
+        self._W = policy(self.adj)(self.adj)
+
     def next_w(self, t: int) -> np.ndarray:
         return self._W
 
@@ -164,9 +178,18 @@ class EdgeActivation:
         self.m = self.adj.shape[0]
         self.p = p
         self._rng = np.random.default_rng(seed)
+        self._weights = metropolis_weights
         iu = np.triu_indices(self.m, k=1)
         keep = self.adj[iu] > 0
         self._edges = (iu[0][keep], iu[1][keep])
+
+    def set_weights(self, policy) -> None:
+        """Install a weight policy (control plane hook): `policy` sees the
+        UNDERLYING adjacency once and returns the per-round weight
+        function applied to each fired subgraph. Edge *selection* (this
+        schedule's RNG) is untouched — replay contracts hold under any
+        policy."""
+        self._weights = policy(self.adj)
 
     def _fired_adj(self) -> np.ndarray:
         ii, jj = self._edges
@@ -176,7 +199,7 @@ class EdgeActivation:
         return a + a.T
 
     def next_w(self, t: int) -> np.ndarray:
-        return metropolis_weights(self._fired_adj())
+        return self._weights(self._fired_adj())
 
     def support_adjacency(self) -> np.ndarray:
         """Fired subgraphs are subgraphs: Metropolis support ⊆ adj + I.
@@ -215,7 +238,7 @@ class ClientChurn(EdgeActivation):
         self._step_membership()
         a = self._fired_adj()
         a *= self.active[:, None] * self.active[None, :]
-        return metropolis_weights(a)
+        return self._weights(a)
 
 
 class StragglerDropout(EdgeActivation):
@@ -232,7 +255,7 @@ class StragglerDropout(EdgeActivation):
         up = self._rng.random(self.m) >= self.drop
         a = self._fired_adj()
         a *= up[:, None] * up[None, :]
-        return metropolis_weights(a)
+        return self._weights(a)
 
 
 class PersistentStraggler(EdgeActivation):
@@ -275,7 +298,7 @@ class PersistentStraggler(EdgeActivation):
             up[self.slow] = False
         a = self._fired_adj()
         a *= up[:, None] * up[None, :]
-        return metropolis_weights(a)
+        return self._weights(a)
 
 
 class ColdJoin(EdgeActivation):
@@ -315,7 +338,7 @@ class ColdJoin(EdgeActivation):
             up[list(self.joiners)] = False
         a = self._fired_adj()
         a *= up[:, None] * up[None, :]
-        return metropolis_weights(a)
+        return self._weights(a)
 
 
 class BroadcastSchedule:
@@ -359,6 +382,16 @@ class BroadcastSchedule:
         fn = getattr(self.inner, "join_events", None)
         return tuple(fn(t)) if fn is not None else ()
 
+    def set_weights(self, policy) -> None:
+        """Proxy the control plane's weight-policy hook to the inner
+        schedule (every process installs the same deterministic policy, so
+        rank 0's broadcast draw already reflects it)."""
+        fn = getattr(self.inner, "set_weights", None)
+        if fn is None:
+            raise ValueError(f"{type(self.inner).__name__} exposes no "
+                             f"set_weights() hook")
+        fn(policy)
+
     def next_w(self, t: int) -> np.ndarray:
         from repro.dist import multihost
         if not multihost.is_distributed():
@@ -392,6 +425,17 @@ class PhaseSwitch:
 
     def support_adjacency(self) -> np.ndarray:
         return schedule_support(self.first) | schedule_support(self.second)
+
+    def set_weights(self, policy) -> None:
+        """Install a weight policy on BOTH phases — each phase hands the
+        policy its own underlying adjacency, so FMMC re-optimizes for the
+        post-switch graph rather than reusing the pre-switch weights."""
+        for sched in (self.first, self.second):
+            fn = getattr(sched, "set_weights", None)
+            if fn is None:
+                raise ValueError(f"{type(sched).__name__} exposes no "
+                                 f"set_weights() hook")
+            fn(policy)
 
     def next_w(self, t: int) -> np.ndarray:
         sched = self.first if t < self.switch_round else self.second

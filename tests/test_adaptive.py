@@ -58,6 +58,37 @@ def test_frozen_contraction_probe():
     assert abs(np.sqrt(ctrl.rho_sq) - 0.5) < 0.1
 
 
+def test_frozen_probe_ignores_near_zero_prev():
+    # a consensus probe at Δ²_prev ≈ 0 carries no contraction signal (the
+    # frozen block already agrees); the update must be a no-op, not a 0/0
+    ctrl = AdaptiveTController(ewma=0.3)
+    before = ctrl.rho_sq
+    ctrl.observe_frozen_contraction(0.0, 0.1)
+    ctrl.observe_frozen_contraction(1e-13, 0.1)
+    assert ctrl.rho_sq == before
+
+
+def test_target_T_clips_at_bounds():
+    ctrl = AdaptiveTController(c=1.0, t_min=2, t_max=6)
+    ctrl.rho_sq = 0.0          # perfect mixing wants T < t_min
+    assert ctrl.target_T() == 2
+    ctrl.rho_sq = (1 - 1e-9) ** 2   # near-disconnected wants T >> t_max
+    assert ctrl.target_T() == 6
+
+
+def test_spectral_ewma_converges_on_fixed_ring():
+    # a FIXED graph makes the EWMA fixed point exact: rho_sq -> ||W-J||_2^2
+    from repro.core.topology import metropolis_weights, underlying_graph
+    adj = underlying_graph("ring", 8)
+    W = metropolis_weights(adj)
+    J = np.ones((8, 8)) / 8
+    true_sq = float(np.linalg.norm(W - J, 2)) ** 2
+    ctrl = AdaptiveTController(ewma=0.2)
+    for _ in range(120):
+        ctrl.observe_mixing_matrix(W)
+    assert abs(ctrl.rho_sq - true_sq) < 1e-9
+
+
 def test_adaptive_masks_alternate():
     ctrl = AdaptiveTController()
     ctrl.rho_sq = 0.0  # T stays 1

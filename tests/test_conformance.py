@@ -31,9 +31,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.api import DFLConfig, HistoryRecorder, Session
+from repro.control import FMMCWeightPolicy, weight_conformance
 from repro.core import mixing
-from repro.core.topology import (lambda2, lemma_a10_gap_bound,
-                                 metropolis_weights, underlying_graph)
+from repro.core.topology import (fastest_mixing_weights, lambda2,
+                                 lemma_a10_gap_bound, metropolis_weights,
+                                 underlying_graph)
 from repro.scenarios import SCENARIO_MATRIX, estimate_rho_sq
 
 pytestmark = pytest.mark.conformance
@@ -431,3 +433,52 @@ def test_single_compilation_across_all_scenarios():
         f"expected exactly 1 jit compilation across "
         f"{len(SCENARIO_MATRIX)} scenarios, got {round_fn._cache_size()}")
     assert all(np.isfinite(v) for v in losses.values())
+
+
+# ---------------------------------------------------------------------------
+# control plane: FMMC weight-policy predicates (closed-loop conformance)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("scenario", SCENARIO_MATRIX, ids=_ids(SCENARIO_MATRIX))
+def test_fmmc_gap_dominates_metropolis_per_family(scenario):
+    """On every graph family of the matrix, the FMMC spectral gap must be
+    no worse than Metropolis — structural (the solver initializes at the
+    Metropolis edge weights and returns its best iterate), checked here on
+    each scenario's per-phase underlying adjacency, alongside the mixing
+    assumptions (symmetric, doubly stochastic, non-negative)."""
+    for label, adj, _p_eff, _factory in scenario.probes(M, seed=0):
+        tag = f"{scenario.name}{':' + label if label else ''}"
+        m = adj.shape[0]
+        J = np.ones((m, m)) / m
+        gap_m = 1.0 - float(np.linalg.norm(metropolis_weights(adj) - J, 2))
+        W = fastest_mixing_weights(adj)
+        gap_f = 1.0 - float(np.linalg.norm(W - J, 2))
+        assert gap_f >= gap_m - 1e-9, (
+            f"{tag}: FMMC gap {gap_f:.4f} below Metropolis {gap_m:.4f}")
+        np.testing.assert_allclose(W, W.T, atol=1e-12,
+                                   err_msg=f"{tag}: FMMC W not symmetric")
+        np.testing.assert_allclose(W.sum(1), 1.0, atol=1e-9,
+                                   err_msg=f"{tag}: FMMC W not stochastic")
+        assert (W >= -1e-12).all(), f"{tag}: negative FMMC weight"
+
+
+@pytest.mark.parametrize("scenario", SCENARIO_MATRIX, ids=_ids(SCENARIO_MATRIX))
+def test_fmmc_schedule_weights_conform(scenario):
+    """Install the FMMC weight policy on each matrix schedule that admits
+    one and check the realized W_t stream end-to-end: per-round structure
+    plus the time-averaged contraction against the Lemma A.10 bound at the
+    scenario's p_eff (`repro.control.weight_conformance` — the exact
+    predicate the control plane emits)."""
+    for label, adj, p_eff, factory in scenario.probes(M, seed=0):
+        sched = factory()
+        if not hasattr(sched, "set_weights"):
+            pytest.skip(f"{scenario.name}: schedule draws its own W")
+        sched.set_weights(FMMCWeightPolicy())
+        burn = scenario.burn_in
+        Ws = [sched.next_w(t) for t in range(burn + 200)][burn:]
+        rep = weight_conformance(Ws, adj, p_eff=p_eff, c_mix=C_MIX)
+        tag = f"{scenario.name}{':' + label if label else ''}"
+        assert rep["ok"], (
+            f"{tag}: FMMC stream fails conformance: gap {rep['gap']:.4f} "
+            f"vs bound {rep['bound']:.4f}, sym_err {rep['sym_err']:.2e}, "
+            f"ds_err {rep['ds_err']:.2e}, min_entry {rep['min_entry']:.2e}")
